@@ -1,0 +1,59 @@
+"""gr_matmul kernel benchmark: XLA-CPU reference path wall-clock (the
+executable baseline here) + interpret-mode kernel equivalence + the TPU
+roofline estimate for the kernel's blocked schedule.
+
+On this CPU container the Pallas kernel runs in interpret mode (python),
+so its wall-clock is meaningless; what we measure is the jnp reference (the
+same algorithm XLA-compiled) and we DERIVE the kernel's TPU roofline from
+its block schedule: per (bt x bs) output tile the kernel moves
+(bt*br + br*bs + bt*bs) * D words and computes 2*bt*br*bs*D^2 int-ops.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import make_ring
+from repro.kernels import gr_matmul, gr_matmul_ref, pick_blocks
+
+from .common import emit, timeit
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    sizes = [128, 256] if not full else [256, 512, 1024]
+    for degs, label in [((), "Z2e32"), ((3,), "GR3"), ((4,), "GR4")]:
+        ring = make_ring(2, 32, degs)
+        for size in sizes:
+            A = ring.random(rng, (size, size))
+            B = ring.random(rng, (size, size))
+            ref = jax.jit(lambda a, b: gr_matmul_ref(a, b, ring))
+            us = timeit(ref, A, B)
+            D = ring.D
+            intops = 2 * size**3 * D * D
+            emit(
+                f"grmm_ref_{label}_s{size}", us,
+                intops=intops, gops_s=round(intops / us / 1e3, 2),
+            )
+            # kernel blocked-schedule roofline (TPU target, analytic)
+            bt, bs, br = pick_blocks(size, size, size)
+            tiles = (size // bt) * (size // bs) * (size // br)
+            vmem_words = (bt * br + br * bs + bt * bs) * D + ring.K * bt * bs
+            hbm_bytes = tiles * (bt * br + br * bs) * D * 4 + (size * size) * D * 4
+            emit(
+                f"grmm_kernel_sched_{label}_s{size}", 0.0,
+                block=f"{bt}x{bs}x{br}", vmem_KiB=vmem_words * 4 // 1024,
+                hbm_bytes=hbm_bytes,
+                arith_intensity=round(intops / hbm_bytes, 1),
+            )
+
+
+def verify():
+    """Interpret-mode equivalence spot check (fast)."""
+    rng = np.random.default_rng(1)
+    ring = make_ring(2, 32, (3,))
+    A = ring.random(rng, (64, 64))
+    B = ring.random(rng, (64, 64))
+    out = gr_matmul(A, B, ring, interpret=True)
+    ref = gr_matmul_ref(A, B, ring)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))

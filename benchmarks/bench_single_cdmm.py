@@ -1,0 +1,108 @@
+"""Paper Figs 2-5: plain EP vs EP_RMFE-I vs EP_RMFE-II over Z_{2^32}.
+
+Measures master encode/decode time, per-worker compute time (wall clock,
+XLA-CPU uint32 matmuls) and counts upload/download volume (bytes), for the
+paper's two regimes:
+  * N=8  workers -> GR(2^32, 3), u=v=2, w=1, R=4
+  * N=16 workers -> GR(2^32, 4), u=v=w=2, R=9
+n = 2 for both optimized variants, exactly as in §V (type II uses the
+paper's measured configuration: B packed via phi1, A embedded).
+
+Paper's claims to validate (§V-B/C):
+  I : encode ~ 1/2 EP, upload  1/2, worker 1/2, decode/download ~ EP.
+  II: decode ~ 1/2 EP, download 1/2, worker 1/2, upload between EP and I.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EPRMFE_I, EPRMFE_II, PlainCDMM, make_ring
+
+from .common import emit, timeit
+
+WORD = 4  # bytes per Z_{2^32} element
+
+
+def _volumes(N, R, tb, rb, sb, m, out_tb, out_sb):
+    up = N * (tb * rb + rb * sb) * m * WORD
+    down = R * out_tb * out_sb * m * WORD
+    return up, down
+
+
+def bench_one(N: int, uvw, sizes, iters: int = 3):
+    u, v, w = uvw
+    base = make_ring(2, 32, ())
+    plain = PlainCDMM(base, N=N, u=u, v=v, w=w)
+    t1 = EPRMFE_I(base, n=2, N=N, u=u, v=v, w=w)
+    t2 = EPRMFE_II(base, n=2, N=N, u=u, v=v, w=w, split_a=False)
+    m = plain.ext.D
+    rng = np.random.default_rng(0)
+
+    for size in sizes:
+        t = r = s = size
+        A = base.random(rng, (t, r))
+        B = base.random(rng, (r, s))
+        idx = jnp.arange(plain.R, dtype=jnp.int32)
+
+        # ---- plain EP (Lemma III.1 baseline) ----
+        eA = plain.ext.embed_base(A, base)
+        eB = plain.ext.embed_base(B, base)
+        enc = jax.jit(lambda a, b: (plain.code.encode_a(a), plain.code.encode_b(b)))
+        FA, GB = enc(eA, eB)
+        worker = jax.jit(lambda fa, gb: plain.ext.matmul(fa, gb))
+        H = plain.code.worker_compute(FA, GB)
+        dec = jax.jit(lambda h: plain.code.decode(h, idx))
+        e_us = timeit(enc, eA, eB, iters=iters)
+        w_us = timeit(worker, FA[0], GB[0], iters=iters)
+        d_us = timeit(dec, H[: plain.R], iters=iters)
+        up, down = _volumes(N, plain.R, t // u, r // w, s // v, m, t // u, s // v)
+        emit(f"ep_plain_N{N}_s{size}_encode", e_us, upload_B=up, m=m)
+        emit(f"ep_plain_N{N}_s{size}_worker", w_us, m=m)
+        emit(f"ep_plain_N{N}_s{size}_decode", d_us, download_B=down)
+
+        # ---- EP_RMFE-I ----
+        enc1 = jax.jit(lambda a, b: t1.batch.encode(*t1.split(a, b)))
+        FA1, GB1 = enc1(A, B)
+        worker1 = jax.jit(lambda fa, gb: t1.ext.matmul(fa, gb))
+        H1 = t1.batch.worker_compute(FA1, GB1)
+
+        def dec1(h):
+            Cs = t1.batch.decode(h, idx)
+            acc = Cs[0]
+            for i in range(1, t1.n):
+                acc = base.add(acc, Cs[i])
+            return acc
+
+        dec1 = jax.jit(dec1)
+        e_us = timeit(enc1, A, B, iters=iters)
+        w_us = timeit(worker1, FA1[0], GB1[0], iters=iters)
+        d_us = timeit(dec1, H1[: t1.R], iters=iters)
+        up1, down1 = _volumes(N, t1.R, t // u, (r // 2) // w, s // v, m, t // u, s // v)
+        emit(f"ep_rmfe1_N{N}_s{size}_encode", e_us, upload_B=up1, m=m)
+        emit(f"ep_rmfe1_N{N}_s{size}_worker", w_us, m=m)
+        emit(f"ep_rmfe1_N{N}_s{size}_decode", d_us, download_B=down1)
+
+        # ---- EP_RMFE-II (paper §V configuration) ----
+        enc2 = jax.jit(lambda a, b: (t2.code.encode_a(t2.pack_a(a)),
+                                     t2.code.encode_b(t2.pack_b(b))))
+        FA2, GB2 = enc2(A, B)
+        worker2 = jax.jit(lambda fa, gb: t2.top.matmul(fa, gb))
+        H2 = t2.code.worker_compute(FA2, GB2)
+        dec2 = jax.jit(lambda h: t2.unpack(t2.code.decode(h, idx)))
+        e_us = timeit(enc2, A, B, iters=iters)
+        w_us = timeit(worker2, FA2[0], GB2[0], iters=iters)
+        d_us = timeit(dec2, H2[: t2.R], iters=iters)
+        up2, down2 = _volumes(
+            N, t2.R, t // u, r // w, (s // 2) // v, m, t // u, (s // 2) // v
+        )
+        emit(f"ep_rmfe2_N{N}_s{size}_encode", e_us, upload_B=up2, m=m)
+        emit(f"ep_rmfe2_N{N}_s{size}_worker", w_us, m=m)
+        emit(f"ep_rmfe2_N{N}_s{size}_decode", d_us, download_B=down2)
+
+
+def run(full: bool = False):
+    sizes = [128, 256, 512] if not full else [256, 512, 1024, 2048]
+    bench_one(8, (2, 2, 1), sizes)
+    bench_one(16, (2, 2, 2), sizes)

@@ -1,0 +1,45 @@
+"""Beyond-paper: time-to-completion under a straggler latency model.
+
+The roofline argument for CDMM: with heavy-tailed worker latencies, an
+uncoded N-shard matmul waits for the SLOWEST worker; EP-coded with threshold
+R waits for the R-th fastest.  We sample the latency model of
+core.straggler and report expected completion-time ratios, plus the measured
+decode overhead that buys the tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EPCode, make_ring, straggler_latencies
+
+from .common import emit, timeit
+
+
+def run(full: bool = False):
+    key = jax.random.PRNGKey(0)
+    trials = 200 if not full else 2000
+    for N, R in [(8, 4), (16, 9), (64, 36)]:
+        tN, tR = [], []
+        for i in range(trials):
+            lat = np.sort(np.asarray(straggler_latencies(jax.random.fold_in(key, i), N)))
+            tN.append(lat[-1])
+            tR.append(lat[R - 1])
+        emit(
+            f"straggler_N{N}_R{R}", 0.0,
+            uncoded_ms=round(float(np.mean(tN)), 2),
+            coded_ms=round(float(np.mean(tR)), 2),
+            speedup=round(float(np.mean(tN) / np.mean(tR)), 2),
+        )
+    # decode cost that buys the tolerance (N=8 paper regime, 256^2 blocks)
+    ring = make_ring(2, 32, (3,))
+    code = EPCode(ring, N=8, u=2, v=2, w=1)
+    rng = np.random.default_rng(0)
+    A = ring.random(rng, (256, 256))
+    B = ring.random(rng, (256, 256))
+    FA, GB = code.encode_a(A), code.encode_b(B)
+    H = code.worker_compute(FA, GB)
+    idx = jnp.arange(4, dtype=jnp.int32)
+    dec = jax.jit(lambda h: code.decode(h, idx))
+    emit("straggler_decode_cost_256", timeit(dec, H[:4]))

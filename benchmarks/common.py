@@ -1,0 +1,32 @@
+"""Benchmark helpers: wall-clock timing of jitted callables + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+ROWS: List[Dict] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, **derived):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    ROWS.append({"name": name, "us": us_per_call, "derived": d})
+    print(f"{name},{us_per_call:.1f},{d}")
+
+
+def header():
+    print("name,us_per_call,derived")

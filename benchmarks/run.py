@@ -1,0 +1,39 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+  figs2-5   bench_single_cdmm  — EP vs EP_RMFE-I/II, N=8/16 (measured)
+  table1    bench_table1       — GCSA vs Batch-EP_RMFE (analytic + measured CSA)
+  kernels   bench_kernels      — gr_matmul ref wall-clock + kernel schedule
+  straggler bench_straggler    — time-to-completion under straggler model
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        choices=[None, "figs", "table1", "kernels", "straggler"],
+    )
+    args = ap.parse_args()
+
+    from . import bench_kernels, bench_single_cdmm, bench_straggler, bench_table1
+    from .common import header
+
+    header()
+    if args.only in (None, "kernels"):
+        bench_kernels.verify()
+        bench_kernels.run(args.full)
+    if args.only in (None, "table1"):
+        bench_table1.run(args.full)
+    if args.only in (None, "straggler"):
+        bench_straggler.run(args.full)
+    if args.only in (None, "figs"):
+        bench_single_cdmm.run(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Coded quantized serving: the paper's technique as a first-class inference
+feature.
+
+An int8 FFN matmul is lifted to Z_{2^32} and executed as EP_RMFE-coded tasks
+across 8 workers; we kill up to 4 workers per request and verify the
+dequantized output is BIT-IDENTICAL to the failure-free run (integer-exact
+codes — no approximation under failures, unlike replication/averaging).
+
+    PYTHONPATH=src python examples/coded_inference.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cdmm import CodedQuantMatmul, quantize_int8
+
+rng = np.random.default_rng(0)
+cm = CodedQuantMatmul(N=8, axis_name=None)  # GR(2^32, 3), R=4
+print(f"coded int8 matmul: N=8 workers, R={cm.R}, ring {cm.scheme.ext}")
+
+# a "transformer FFN" shaped problem: tokens x d_model @ d_model x d_ff
+x = rng.standard_normal((32, 256)).astype(np.float32)
+w = rng.standard_normal((256, 512)).astype(np.float32)
+
+y_ref = np.asarray(cm(jnp.asarray(x), jnp.asarray(w), mask=None))
+
+for fail in [1, 2, 3, 4]:
+    mask = np.ones(8, dtype=bool)
+    dead = rng.choice(8, size=fail, replace=False)
+    mask[dead] = False
+    y = np.asarray(cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask)))
+    ident = np.array_equal(y, y_ref)
+    print(f"{fail} dead workers {sorted(map(int, dead))}: bit-identical={ident}")
+    assert ident
+
+# quantization (not coding) is the only error source
+err = np.abs(y_ref - x @ w).max() / np.abs(x @ w).max()
+print(f"int8 quantization rel-err vs fp32: {err:.4f} (coding adds 0.0)")

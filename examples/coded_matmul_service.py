@@ -1,0 +1,47 @@
+"""Distributed coded-matmul service on a real device mesh (SPMD).
+
+Spawns 8 host devices, runs the paper's master/worker protocol under
+shard_map with random straggler injection per request, and validates every
+response bit-exactly.  This is the standalone data-plane service described
+in DESIGN.md §4 (the paper's own deployment model).
+
+    PYTHONPATH=src python examples/coded_matmul_service.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.cdmm import DistributedBatchRMFE, cdmm_shard_map
+from repro.core import BatchEPRMFE, make_ring, select_workers, simulate_stragglers
+
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(8), ("workers",))
+Z32 = make_ring(2, 32, ())
+scheme = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)
+service = DistributedBatchRMFE(scheme, "workers")
+serve = jax.jit(cdmm_shard_map(service, mesh, "workers"))
+
+rng = np.random.default_rng(0)
+key = jax.random.PRNGKey(0)
+print(f"service up: N=8 workers, R={scheme.R}, ring {scheme.ext}")
+for req in range(5):
+    As = Z32.random(rng, (2, 64, 64))
+    Bs = Z32.random(rng, (2, 64, 64))
+    key, k = jax.random.split(key)
+    mask, _ = simulate_stragglers(k, 8, fail_prob=0.35, min_live=scheme.R)
+    t0 = time.perf_counter()
+    Cs = serve(As, Bs, mask)
+    jax.block_until_ready(Cs)
+    dt = (time.perf_counter() - t0) * 1e3
+    ok = all(
+        np.array_equal(np.asarray(Cs[i]), np.asarray(Z32.matmul(As[i], Bs[i])))
+        for i in range(2)
+    )
+    dead = [i for i, v in enumerate(np.asarray(mask)) if not v]
+    print(f"req {req}: dead workers {dead or 'none'} -> exact={ok} ({dt:.1f} ms)")

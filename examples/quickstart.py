@@ -1,0 +1,47 @@
+"""Quickstart: the paper in ~50 lines.
+
+Batch of n=2 matrix products over Z_{2^32} (machine words!), computed by 8
+coded workers, any 4 of which suffice — here 4 workers "die" and the result
+is still exact.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import BatchEPRMFE, make_ring
+
+# the data ring: Z_{2^32} — native uint32 wraparound arithmetic
+Z32 = make_ring(2, 32, ())
+
+# Batch-EP_RMFE: n=2 products packed by a (2,3)-RMFE into GR(2^32, 3),
+# EP code with u=v=2, w=1 over 8 workers -> recovery threshold R = 4
+scheme = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)
+print(f"extension ring: {scheme.ext}, recovery threshold R={scheme.R} of N=8")
+
+rng = np.random.default_rng(0)
+As = Z32.random(rng, (2, 64, 64))   # two 64x64 uint32 matrices
+Bs = Z32.random(rng, (2, 64, 64))
+
+# master: pack + encode -> per-worker tasks
+FA, GB = scheme.encode(As, Bs)
+
+# workers: local block products over the extension ring (the Pallas kernel
+# on TPU; jnp reference here)
+H = scheme.worker_compute(FA, GB)
+
+# stragglers: workers 1, 2, 5, 6 never respond
+alive = jnp.asarray([0, 3, 4, 7], dtype=jnp.int32)
+Cs = scheme.decode(jnp.take(H, alive, axis=0), alive)
+
+# exactness check against the direct products
+for i in range(2):
+    expect = Z32.matmul(As[i], Bs[i])
+    assert np.array_equal(np.asarray(Cs[i]), np.asarray(expect))
+print("recovered both products exactly from 4/8 workers ✓")
+
+# compare with GCSA's threshold at the same batch (paper Table 1)
+from repro.core import gcsa_cost_model
+
+g = gcsa_cost_model(64, 64, 64, 2, 2, 1, n=2, kappa=2, N=8, m_eff=3)
+print(f"GCSA would need R={g.R} of 8 workers; Batch-EP_RMFE needs {scheme.R}")

@@ -1,0 +1,8 @@
+"""Distributed CDMM runtime: shard_map workers, straggler masks, quantized serving."""
+from .runtime import DistributedEP, DistributedBatchRMFE, cdmm_shard_map
+from .quantized import CodedQuantMatmul, quantize_int8, lift_i8_to_ring, unlift_to_i32
+
+__all__ = [
+    "DistributedEP", "DistributedBatchRMFE", "cdmm_shard_map",
+    "CodedQuantMatmul", "quantize_int8", "lift_i8_to_ring", "unlift_to_i32",
+]

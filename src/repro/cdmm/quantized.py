@@ -1,0 +1,133 @@
+"""Bit-exact straggler-tolerant int8 matmul for serving, via CDMM over Z_{2^32}.
+
+The paper's technique is integer-exact, so it cannot run bf16 matmuls — but
+quantized inference matmuls ARE integer matmuls: with per-token activation
+scales and per-channel weight scales,
+
+    y = (sx ⊗ sw) * (q_x @ q_w),   q ∈ int8
+
+and |sum_d q_x q_w| <= d * 127^2 < 2^31 for d <= 131k, so the int32 product
+is exact and equals its value mod 2^32.  Lifting int8 two's-complement into
+Z_{2^32} makes the accumulation a Galois-ring matmul — EP_RMFE-coded across
+N workers, any R of which reconstruct the EXACT integer result (bit-identical
+dequantized output, no approximation from stragglers/failures).
+
+This is the first-class integration of the paper into the serving plane
+(DESIGN.md §4): `coded_ffn` wires it into transformer FFNs on the `model`
+mesh axis (N=16 workers → GR(2^32, 4), the paper's own 16-worker regime).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.batch_rmfe import BatchEPRMFE
+from repro.core.galois import Ring, make_ring
+from repro.core.straggler import select_workers
+
+from .runtime import DistributedEP
+
+__all__ = ["quantize_int8", "CodedQuantMatmul", "lift_i8_to_ring", "unlift_to_i32"]
+
+
+def quantize_int8(x: jnp.ndarray, axis: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization along ``axis``; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def lift_i8_to_ring(q: jnp.ndarray) -> jnp.ndarray:
+    """int8 -> Z_{2^32} two's-complement lift, trailing ring dim D=1."""
+    return q.astype(jnp.int32).astype(jnp.uint32)[..., None]
+
+
+def unlift_to_i32(c: jnp.ndarray) -> jnp.ndarray:
+    """Z_{2^32} (..., 1) -> exact signed int32 result."""
+    return c[..., 0].astype(jnp.int32)
+
+
+class CodedQuantMatmul:
+    """EP_RMFE-I-coded exact int8 matmul across a worker mesh axis.
+
+    n = 2 (MatDot-style split of the contraction dim) with N workers on
+    ``axis_name``; u x v output partition, w | d/(2).  With N=16 the scheme
+    runs over GR(2^32, 4) — the paper's 16-worker evaluation point.
+    """
+
+    def __init__(
+        self,
+        N: int,
+        axis_name: Optional[str],
+        *,
+        n: int = 2,
+        u: int = 2,
+        v: int = 2,
+        w: int = 1,
+        use_kernel: bool = False,
+    ):
+        self.base = make_ring(2, 32, ())
+        self.n = n
+        self.scheme = BatchEPRMFE(self.base, n=n, N=N, u=u, v=v, w=w)
+        self.axis = axis_name
+        self.dep = (
+            DistributedEP(self.scheme.code, axis_name, use_kernel=use_kernel)
+            if axis_name
+            else None
+        )
+
+    @property
+    def R(self) -> int:
+        return self.scheme.R
+
+    def _split(self, X: jnp.ndarray, axis: int) -> jnp.ndarray:
+        """Split the contraction dim into n slices: (..., n*c, ...) -> (n, ..., c, ...)."""
+        n = self.n
+        d = X.shape[axis]
+        assert d % n == 0, (d, n)
+        parts = jnp.split(X, n, axis=axis)
+        return jnp.stack(parts, axis=0)
+
+    def exact_int_matmul(
+        self, qx: jnp.ndarray, qw: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """(tokens, d) int8 @ (d, f) int8 -> exact int32, coded across workers.
+
+        If ``axis_name`` was given this must run inside shard_map over that
+        axis with qx/qw/mask replicated; otherwise it runs locally.
+        """
+        Xs = self._split(lift_i8_to_ring(qx), axis=1)  # (n, t, d/n, 1)
+        Ws = self._split(lift_i8_to_ring(qw), axis=0)  # (n, d/n, f, 1)
+        A = self.scheme.pack(Xs)  # (t, d/n, Dm)
+        B = self.scheme.pack(Ws)  # (d/n, f, Dm)
+        if self.dep is not None:
+            C = self.dep(A, B, mask)
+        else:
+            idx = (
+                select_workers(mask, self.scheme.R)
+                if mask is not None
+                else jnp.arange(self.scheme.R, dtype=jnp.int32)
+            )
+            C = self.scheme.code.run(A, B, idx)
+        Cs = self.scheme.unpack(C)  # (n, t, f, 1)
+        total = Cs[0]
+        for i in range(1, self.n):
+            total = self.base.add(total, Cs[i])
+        return unlift_to_i32(total)
+
+    def __call__(
+        self,
+        x: jnp.ndarray,
+        w: jnp.ndarray,
+        mask: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """Float-in/float-out coded matmul: quantize, code, dequantize."""
+        qx, sx = quantize_int8(x, axis=-1)  # (t, d), (t, 1)
+        qw, sw = quantize_int8(w, axis=0)  # (d, f), (1, f)
+        acc = self.exact_int_matmul(qx, qw, mask)
+        return acc.astype(jnp.float32) * sx * sw

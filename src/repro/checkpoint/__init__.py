@@ -1,0 +1,2 @@
+"""Sharded checkpointing, async save, elastic restore."""
+from .checkpoint import Checkpointer

@@ -1,0 +1,150 @@
+"""Sharded checkpointing with async save and elastic (re-mesh) restore.
+
+Format: <dir>/step_<k>/
+    manifest.json            — step, flat key list, shapes/dtypes
+    <i>.npz                  — chunked flat arrays (host-gathered)
+
+Restore takes an OPTIONAL target mesh + sharding tree: arrays are loaded on
+host and device_put with the new shardings — i.e. a checkpoint written on a
+(16,16) mesh restores onto (2,16,16) or a degraded (15,16) mesh unchanged
+(elastic scaling / failed-node replacement).  Data-pipeline state is just the
+step integer (deterministic replay).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = {}
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+        return out
+    return {_SEP.join(prefix): tree}
+
+
+def _unflatten(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split(_SEP)
+        cur = tree
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return tree
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Dict, blocking: bool = True):
+        """Host-gather and write; async when blocking=False."""
+        flat = _flatten(tree)
+        host = {}
+        dtypes = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            dtypes[k] = str(a.dtype)
+            if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                # npz can't serialize bf16 natively: store the raw bits
+                a = a.view(np.uint16)
+            host[k] = a
+
+        def write():
+            d = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = d + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "0.npz"), **host)
+            manifest = {
+                "step": step,
+                "keys": sorted(host),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": dtypes,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, d)  # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            d = os.path.join(self.dir, f"step_{s:08d}")
+            for root, dirs, files in os.walk(d, topdown=False):
+                for fn in files:
+                    os.remove(os.path.join(root, fn))
+                os.rmdir(root)
+
+    # -- restore ---------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        step: Optional[int] = None,
+        shardings: Optional[Dict] = None,
+    ) -> Dict:
+        """Load a checkpoint; optionally device_put with NEW shardings
+        (elastic re-mesh)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "0.npz"))
+        flat = {}
+        for k in manifest["keys"]:
+            a = data[k]
+            if manifest["dtypes"].get(k) == "bfloat16":
+                import ml_dtypes
+
+                a = a.view(ml_dtypes.bfloat16)
+            flat[k] = a
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten(
+                {
+                    k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+                    for k, v in _flatten(tree).items()
+                }
+            )
+        return tree

@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — CDMM over Galois rings via RMFE."""
+from .galois import Ring, make_ring, find_irreducible_gfp, is_irreducible_gfp
+from .rmfe import BasicRMFE, ConcatRMFE, build_rmfe
+from .ep_codes import EPCode, PlainCDMM, ep_cost_model, EPCosts
+from .batch_rmfe import BatchEPRMFE
+from .single_rmfe import EPRMFE_I, EPRMFE_II
+from .gcsa import CSACode, gcsa_cost_model, gr_solve
+from .straggler import select_workers, simulate_stragglers, straggler_latencies
+
+__all__ = [
+    "Ring", "make_ring", "find_irreducible_gfp", "is_irreducible_gfp",
+    "BasicRMFE", "ConcatRMFE", "build_rmfe",
+    "EPCode", "PlainCDMM", "ep_cost_model", "EPCosts",
+    "BatchEPRMFE", "EPRMFE_I", "EPRMFE_II",
+    "CSACode", "gcsa_cost_model", "gr_solve",
+    "select_workers", "simulate_stragglers", "straggler_latencies",
+]

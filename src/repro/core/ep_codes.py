@@ -1,0 +1,216 @@
+"""Entangled Polynomial codes (and Polynomial / MatDot specialisations) over a
+Galois ring with enough exceptional points, plus the plain-embedding CDMM
+baseline of Lemma III.1.
+
+EP code [Yu-Maddah-Ali-Avestimehr], paper §III-B layout:
+
+    A (t x r) -> u x w blocks A_ij;   f(x) = sum A_ij x^{(i-1)w + (j-1)}
+    B (r x s) -> w x v blocks B_kl;   g(x) = sum B_kl x^{(w-k) + (l-1)uw}
+    h = f*g has degree uvw + w - 2;   R = uvw + w - 1
+    C_il = coeff of x^{(i-1)w + (w-1) + (l-1)uw} in h.
+
+Encoding is a ring matmul against a fixed Vandermonde slice (MXU-friendly;
+see DESIGN.md §3.2).  Decoding interpolates h from ANY R worker responses —
+the point subset is a runtime value, so the Lagrange coefficient matrix is
+built traceably on device (straggler tolerance inside jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import vmap
+
+from .galois import Ring
+from .polyops import (
+    as_u32,
+    lagrange_coeff_matrix,
+    s_vandermonde,
+    vandermonde,
+)
+
+__all__ = ["EPCode", "PlainCDMM", "ep_cost_model"]
+
+
+@dataclass(frozen=True)
+class EPCosts:
+    """Analytic cost model, counted in elements/ops of a reference base ring
+    (the paper counts everything in GR(p^e, d))."""
+
+    N: int
+    R: int
+    m_eff: float  # extension factor over the reference base ring
+    upload: float
+    download: float
+    encode_ops: float
+    decode_ops: float
+    worker_ops: float
+
+
+def ep_cost_model(
+    t: int, r: int, s: int, u: int, v: int, w: int, N: int, m_eff: float,
+    batch: int = 1,
+) -> EPCosts:
+    """Costs of one EP execution over an extension with [ext:base] = m_eff,
+    amortized over ``batch`` products (paper Thm III.2 accounting)."""
+    R = u * v * w + w - 1
+    tb, rb, sb = t // u, r // w, s // v
+    up = N * (tb * rb + rb * sb) * m_eff / batch
+    down = R * tb * sb * m_eff / batch
+    # soft-O op counts (log^2 factors reported separately in benchmarks)
+    enc = N * (tb * rb * (u * w) + rb * sb * (w * v)) * m_eff**2 / batch
+    dec = R * R * tb * sb * m_eff**2 / batch
+    worker = tb * rb * sb * m_eff**2 / batch
+    return EPCosts(N, R, m_eff, up, down, enc, dec, worker)
+
+
+class EPCode:
+    """EP code over ``ring`` with N workers and partition (u, v, w).
+
+    Polynomial codes: w = 1.  MatDot codes: u = v = 1.
+    """
+
+    def __init__(self, ring: Ring, N: int, u: int, v: int, w: int):
+        self.ring = ring
+        self.N, self.u, self.v, self.w = N, u, v, w
+        self.R = u * v * w + w - 1
+        if self.R > N:
+            raise ValueError(f"recovery threshold {self.R} > N={N}")
+        if N > ring.p**ring.D:
+            raise ValueError(
+                f"N={N} workers need {N} exceptional points but |T|="
+                f"{ring.p}^{ring.D}; extend the ring"
+            )
+        pts = ring.exceptional_points(N)
+        self.points_np = pts
+        self.points = jnp.asarray(pts)
+        # exponents (0-indexed i<u, j<w, k<w, l<v)
+        self.exp_f = [i * w + j for i in range(u) for j in range(w)]
+        self.exp_g = [(w - 1 - k) + l * u * w for k in range(w) for l in range(v)]
+        self.deg_h = (u * w - 1) + ((w - 1) + (v - 1) * u * w)
+        assert self.deg_h + 1 == self.R
+        V = s_vandermonde(ring, pts, self.R)  # (N, R, D) object
+        self.Vf = jnp.asarray(as_u32(V[:, self.exp_f]))  # (N, uw, D)
+        self.Vg = jnp.asarray(as_u32(V[:, self.exp_g]))  # (N, wv, D)
+        self.exp_c = np.array(
+            [[i * w + (w - 1) + l * u * w for l in range(v)] for i in range(u)]
+        )  # (u, v)
+
+    # -- partitioning ------------------------------------------------------
+
+    def split_a(self, A: jnp.ndarray) -> jnp.ndarray:
+        """(t, r, D) -> (uw, t/u, r/w, D), ordered to match exp_f."""
+        t, r, D = A.shape
+        u, w = self.u, self.w
+        assert t % u == 0 and r % w == 0, (A.shape, (u, w))
+        blocks = A.reshape(u, t // u, w, r // w, D)
+        return blocks.transpose(0, 2, 1, 3, 4).reshape(u * w, t // u, r // w, D)
+
+    def split_b(self, B: jnp.ndarray) -> jnp.ndarray:
+        """(r, s, D) -> (wv, r/w, s/v, D), ordered to match exp_g."""
+        r, s, D = B.shape
+        w, v = self.w, self.v
+        assert r % w == 0 and s % v == 0, (B.shape, (w, v))
+        blocks = B.reshape(w, r // w, v, s // v, D)
+        return blocks.transpose(0, 2, 1, 3, 4).reshape(w * v, r // w, s // v, D)
+
+    # -- encode ------------------------------------------------------------
+
+    def encode_a(self, A: jnp.ndarray) -> jnp.ndarray:
+        """master-side encode: (t, r, D) -> per-worker (N, t/u, r/w, D)."""
+        blocks = self.split_a(A)
+        K, tb, rb, D = blocks.shape
+        flat = blocks.reshape(K, tb * rb, D)
+        out = self.ring.matmul(self.Vf, flat)  # (N, tb*rb, D)
+        return out.reshape(self.N, tb, rb, D)
+
+    def encode_b(self, B: jnp.ndarray) -> jnp.ndarray:
+        blocks = self.split_b(B)
+        K, rb, sb, D = blocks.shape
+        flat = blocks.reshape(K, rb * sb, D)
+        out = self.ring.matmul(self.Vg, flat)
+        return out.reshape(self.N, rb, sb, D)
+
+    # -- worker --------------------------------------------------------------
+
+    def worker_compute(self, FA: jnp.ndarray, GB: jnp.ndarray) -> jnp.ndarray:
+        """(N, tb, rb, D) x (N, rb, sb, D) -> (N, tb, sb, D)."""
+        return vmap(self.ring.matmul)(FA, GB)
+
+    # -- decode ----------------------------------------------------------------
+
+    def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """Recover C from responses of workers ``idx`` (any R of them).
+
+        H: (R, tb, sb, D) responses; idx: (R,) int32 worker ids (may be a
+        traced runtime value — straggler-dependent).
+        """
+        ring = self.ring
+        R, tb, sb, D = H.shape
+        assert R == self.R, (R, self.R)
+        pts = jnp.take(self.points, idx, axis=0)  # (R, D)
+        M = lagrange_coeff_matrix(ring, pts)  # (R, R, D)
+        coeffs = ring.matmul(M, H.reshape(R, tb * sb, D))  # (R, tb*sb, D)
+        coeffs = coeffs.reshape(R, tb, sb, D)
+        cblocks = jnp.take(coeffs, jnp.asarray(self.exp_c.ravel()), axis=0)
+        cblocks = cblocks.reshape(self.u, self.v, tb, sb, D)
+        C = cblocks.transpose(0, 2, 1, 3, 4).reshape(self.u * tb, self.v * sb, D)
+        return C
+
+    # -- end to end -------------------------------------------------------------
+
+    def run(
+        self, A: jnp.ndarray, B: jnp.ndarray, idx: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """Full pipeline with an optional worker subset (defaults to first R)."""
+        FA, GB = self.encode_a(A), self.encode_b(B)
+        H = self.worker_compute(FA, GB)
+        if idx is None:
+            idx = jnp.arange(self.R, dtype=jnp.int32)
+        return self.decode(jnp.take(H, idx, axis=0), idx)
+
+    def costs(self, t: int, r: int, s: int, base: Ring, batch: int = 1) -> EPCosts:
+        return ep_cost_model(
+            t, r, s, self.u, self.v, self.w, self.N,
+            m_eff=self.ring.D / base.D, batch=batch,
+        )
+
+
+class PlainCDMM:
+    """Baseline of Lemma III.1: matrices over a small base ring are *embedded*
+    into the degree-m extension (no RMFE packing) and EP codes run there.
+
+    Every transferred/computed extension element costs m base elements —
+    the overhead the paper's RMFE batching removes.
+    """
+
+    def __init__(self, base: Ring, N: int, u: int, v: int, w: int):
+        self.base = base
+        # smallest extension with >= N exceptional points
+        m = 1
+        while base.p ** (base.D * m) < N:
+            m += 1
+        self.ext = base.extend(m) if m > 1 else base
+        while self.ext.p**self.ext.D < N:  # coprime bump may still be short
+            m += 1
+            self.ext = base.extend(m)
+        self.code = EPCode(self.ext, N, u, v, w)
+
+    @property
+    def R(self) -> int:
+        return self.code.R
+
+    def run(
+        self, A: jnp.ndarray, B: jnp.ndarray, idx: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """A: (t, r, baseD), B: (r, s, baseD) -> C = AB over the base ring."""
+        eA = self.ext.embed_base(A, self.base)
+        eB = self.ext.embed_base(B, self.base)
+        C = self.code.run(eA, eB, idx)
+        # products of embedded elements stay in the embedded base ring
+        return C[..., : self.base.D]
+
+    def costs(self, t: int, r: int, s: int) -> EPCosts:
+        return self.code.costs(t, r, s, self.base)

@@ -1,0 +1,183 @@
+"""CSA / GCSA baseline for batch DMM over a Galois ring (paper Table 1).
+
+We implement the executable *CSA* instance of the GCSA family — the point
+(u, v, w) = (1, 1, 1), kappa = n, which is the configuration GCSA uses for
+its best communication costs (and the one Table 1 contrasts most sharply
+with Batch-EP_RMFE: R_CSA = 2n-1 vs R_RMFE = uvw + w - 1).
+
+Construction (Jia-Jafar CSA, ported to Galois rings with digit-lift
+exceptional points so that all f_gamma - alpha_i differences are units):
+
+    A~_i = Delta(a_i) * sum_g A_g / (f_g - a_i),   B~_i = sum_g B_g / (f_g - a_i)
+    H_i  = A~_i B~_i = sum_g c_g A_g B_g / (f_g - a_i)  +  P(a_i),  deg P <= L-2
+    c_g  = prod_{d != g} (f_d - f_g)       (a unit)
+
+Any R = 2L-1 responses give a generalized Cauchy-Vandermonde system, solved
+on device by unit-pivot Gauss-Jordan elimination (valid over a local ring:
+an invertible matrix always has a unit pivot in every elimination column).
+
+General (u, v, w, kappa) GCSA is provided as an *analytic* cost model with
+the Table-1 formulas (`gcsa_cost_model`) — the paper's own comparison is
+likewise analytic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax import vmap
+
+from .ep_codes import EPCosts
+from .galois import Ring
+from .polyops import as_u32, s_vandermonde
+
+__all__ = ["CSACode", "gcsa_cost_model", "gr_solve"]
+
+
+def is_unit_mask(ring: Ring, x: jnp.ndarray) -> jnp.ndarray:
+    """(…, D) -> (…,) bool: element is a unit iff some coeff != 0 mod p."""
+    return jnp.any(x % jnp.uint32(ring.p) != 0, axis=-1)
+
+
+def gr_solve(ring: Ring, M: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """Solve M X = Y over the ring; M (n, n, D) invertible, Y (n, b, D).
+
+    Unit-pivot Gauss-Jordan, traceable (n is static, pivot row is dynamic).
+    """
+    n = M.shape[0]
+    for k in range(n):
+        col = M[:, k]  # (n, D)
+        units = is_unit_mask(ring, col) & (jnp.arange(n) >= k)
+        j = jnp.argmax(units)
+        perm = jnp.arange(n)
+        perm = perm.at[k].set(j).at[j].set(k)
+        M = M[perm]
+        Y = Y[perm]
+        inv = ring.inv(M[k, k])
+        Mk = ring.mul(inv[None, :], M[k])  # (n, D)
+        Yk = ring.mul(inv[None, :], Y[k])  # (b, D)
+        M = M.at[k].set(Mk)
+        Y = Y.at[k].set(Yk)
+        factors = M[:, k].at[k].set(0)  # (n, D)
+        M = ring.sub(M, ring.mul(factors[:, None, :], Mk[None, :, :]))
+        Y = ring.sub(Y, ring.mul(factors[:, None, :], Yk[None, :, :]))
+    return Y
+
+
+class CSACode:
+    """Batch DMM of L products over ``ring`` with N workers, R = 2L-1."""
+
+    def __init__(self, ring: Ring, L: int, N: int):
+        self.ring = ring
+        self.L, self.N = L, N
+        self.R = 2 * L - 1
+        if self.R > N:
+            raise ValueError(f"R={self.R} > N={N}")
+        if L + N > ring.p**ring.D:
+            raise ValueError(
+                f"need {L + N} exceptional points, |T| = {ring.p}^{ring.D}"
+            )
+        pts = ring.exceptional_points(L + N)
+        fs, alphas = pts[:L], pts[L:]
+        self.fs_np, self.alphas_np = fs, alphas
+
+        # host precompute: cauchy terms, Delta(alpha), c_g
+        cau = np.zeros((N, L, ring.D), dtype=object)  # 1/(f_g - a_i)
+        delta = np.zeros((N, ring.D), dtype=object)
+        for i in range(N):
+            d = ring.s_one()
+            for g in range(L):
+                diff = ring.s_sub(fs[g].astype(object), alphas[i].astype(object))
+                cau[i, g] = ring.s_inv(diff)
+                d = ring.s_mul(d, diff)
+            delta[i] = d
+        cg = np.zeros((L, ring.D), dtype=object)
+        for g in range(L):
+            c = ring.s_one()
+            for d_ in range(L):
+                if d_ != g:
+                    c = ring.s_mul(
+                        c, ring.s_sub(fs[d_].astype(object), fs[g].astype(object))
+                    )
+            cg[g] = c
+        self.cauchy = jnp.asarray(as_u32(cau))  # (N, L, D)
+        self.enc_a = jnp.asarray(
+            as_u32(
+                np.array(
+                    [[ring.s_mul(delta[i], cau[i, g]) for g in range(L)] for i in range(N)],
+                    dtype=object,
+                )
+            )
+        )  # (N, L, D): Delta(a_i)/(f_g - a_i)
+        self.cg_inv = jnp.asarray(
+            as_u32(np.array([ring.s_inv(cg[g]) for g in range(L)], dtype=object))
+        )  # (L, D)
+        V = s_vandermonde(ring, alphas, max(L - 1, 1))  # (N, L-1, D)
+        self.vand = jnp.asarray(as_u32(V))
+        self.points = jnp.asarray(alphas)
+
+    # -- encode ---------------------------------------------------------------
+
+    def encode_a(self, As: jnp.ndarray) -> jnp.ndarray:
+        """As (L, t, r, D) -> (N, t, r, D)."""
+        L, t, r, D = As.shape
+        return self.ring.matmul(self.enc_a, As.reshape(L, t * r, D)).reshape(
+            self.N, t, r, D
+        )
+
+    def encode_b(self, Bs: jnp.ndarray) -> jnp.ndarray:
+        L, r, s, D = Bs.shape
+        return self.ring.matmul(self.cauchy, Bs.reshape(L, r * s, D)).reshape(
+            self.N, r, s, D
+        )
+
+    def worker_compute(self, FA, GB):
+        return vmap(self.ring.matmul)(FA, GB)
+
+    # -- decode -----------------------------------------------------------------
+
+    def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """H (R, t, s, D) from workers idx (R,) -> (L, t, s, D) products."""
+        ring = self.ring
+        R, t, s, D = H.shape
+        assert R == self.R
+        cau = jnp.take(self.cauchy, idx, axis=0)  # (R, L, D)
+        van = jnp.take(self.vand, idx, axis=0)  # (R, L-1, D)
+        M = jnp.concatenate([cau, van], axis=1)  # (R, R, D)
+        X = gr_solve(ring, M, H.reshape(R, t * s, D))  # (R, t*s, D)
+        U = X[: self.L].reshape(self.L, t, s, D)
+        C = ring.mul(self.cg_inv[:, None, None, :], U)
+        return C
+
+    def run(self, As, Bs, idx: Optional[jnp.ndarray] = None):
+        FA, GB = self.encode_a(As), self.encode_b(Bs)
+        H = self.worker_compute(FA, GB)
+        if idx is None:
+            idx = jnp.arange(self.R, dtype=jnp.int32)
+        return self.decode(jnp.take(H, idx, axis=0), idx)
+
+    def costs(self, t: int, r: int, s: int, base: Ring) -> EPCosts:
+        return gcsa_cost_model(
+            t, r, s, 1, 1, 1, self.L, self.L, self.N, self.ring.D / base.D
+        )
+
+
+def gcsa_cost_model(
+    t: int, r: int, s: int, u: int, v: int, w: int,
+    n: int, kappa: int, N: int, m_eff: float,
+) -> EPCosts:
+    """Table-1 GCSA costs, per product, in base-ring elements.
+
+    R = uvw(n + kappa - 1) + w - 1;   upload x n/kappa;   worker x n/kappa.
+    GCSA needs >= N + n exceptional points (vs N for Batch-EP_RMFE).
+    """
+    R = u * v * w * (n + kappa - 1) + w - 1
+    tb, rb, sb = t // u, r // w, s // v
+    up = (tb * rb + rb * sb) * (n / kappa) * N * m_eff
+    down = R * tb * sb * m_eff / n
+    enc = (tb * rb * u * w + rb * sb * w * v) * (n / kappa) * N * m_eff**2
+    dec = R * R * tb * sb * m_eff**2 / n
+    worker = tb * rb * sb * (n / kappa) * m_eff**2
+    return EPCosts(N, R, m_eff, up, down, enc, dec, worker)

@@ -1,0 +1,123 @@
+"""Reverse Multiplication-Friendly Embeddings over Galois rings.
+
+An (n, m)-RMFE over GR = GR(p^e, d) is a pair of GR-linear maps
+``phi: GR^n -> GR_m`` and ``psi: GR_m -> GR^n`` with
+
+    psi(phi(x) * phi(y)) = x * y   (elementwise product)
+
+Construction (interpolation-based, [CCXY18]/[CRX21] adapted to digit-lift
+exceptional points):
+
+* pick n exceptional points a_1..a_n of GR (requires n <= p^d),
+* phi(x) = the coefficient vector of the unique polynomial f_x of degree < n
+  with f_x(a_i) = x_i, zero-padded to length m and read as an element of the
+  tower GR_m = GR[y]/(g) (i.e. phi(x) = f_x(y)),
+* psi(gamma) = evaluations of gamma's coefficient polynomial at a_1..a_n.
+
+Because deg(f_x f_y) <= 2n-2 < m, the product phi(x)phi(y) never wraps mod
+g, its tower coefficients are exactly the coefficients of f_x f_y, and
+evaluating at a_i gives x_i y_i.  Any m >= 2n-1 works (the tower degree is
+auto-bumped by Ring.extend to stay coprime with d; psi reads all m
+coefficients so it remains a left inverse on products).
+
+``ConcatRMFE`` composes (n1,m1) over GR(p^e, d*m2) with (n2,m2) over
+GR(p^e, d) into an (n1*n2, m1*m2)-RMFE (paper Lemma II.5) — needed when the
+base exceptional set is tiny (|T| = 2 for Z_{2^e}).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .galois import Ring
+from .polyops import as_u32, s_lagrange_coeff_matrix, s_vandermonde
+
+__all__ = ["BasicRMFE", "ConcatRMFE", "build_rmfe"]
+
+
+class BasicRMFE:
+    """(n, m)-RMFE over ``base`` with m = actual top extension degree."""
+
+    def __init__(self, base: Ring, n: int, min_m: int = 0):
+        if n > base.p**base.D:
+            raise ValueError(
+                f"n={n} exceeds exceptional set size {base.p}^{base.D}; "
+                "use ConcatRMFE"
+            )
+        self.base = base
+        self.n = n
+        m_req = max(2 * n - 1, min_m, 2)
+        self.ext = base.extend(m_req)
+        self.m = self.ext.degrees[-1]
+        pts = base.exceptional_points(n)
+        self.points = pts
+        # phi: value vector -> coefficients of interpolating poly (deg < n)
+        M = s_lagrange_coeff_matrix(base, pts)  # (n, n, D) object
+        self.M_phi = jnp.asarray(as_u32(M))
+        # psi: tower coefficients -> evaluations at the n points
+        V = s_vandermonde(base, pts, self.m)  # (n, m, D) object
+        self.V_psi = jnp.asarray(as_u32(V))
+
+    # phi ---------------------------------------------------------------
+
+    def phi(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., n, baseD) -> (..., extD)."""
+        base, ext = self.base, self.ext
+        batch = x.shape[:-2]
+        flat = x.reshape((-1, self.n, base.D))
+        flat = jnp.moveaxis(flat, 0, 1)  # (n, B, D)
+        coeffs = base.matmul(self.M_phi, flat)  # (n, B, D)
+        B = coeffs.shape[1]
+        tower = jnp.zeros((B, self.m, base.D), dtype=base.dtype)
+        tower = tower.at[:, : self.n, :].set(jnp.moveaxis(coeffs, 0, 1))
+        out = ext.from_tower_coeffs(tower)  # (B, extD)
+        return out.reshape(batch + (ext.D,))
+
+    # psi ---------------------------------------------------------------
+
+    def psi(self, g: jnp.ndarray) -> jnp.ndarray:
+        """g: (..., extD) -> (..., n, baseD)."""
+        base, ext = self.base, self.ext
+        batch = g.shape[:-1]
+        tower = ext.tower_coeffs(g.reshape((-1, ext.D)), base)  # (B, m, D)
+        tower = jnp.moveaxis(tower, 0, 1)  # (m, B, D)
+        vals = base.matmul(self.V_psi, tower)  # (n, B, D)
+        vals = jnp.moveaxis(vals, 0, 1)  # (B, n, D)
+        return vals.reshape(batch + (self.n, base.D))
+
+
+class ConcatRMFE:
+    """(n1*n2, m1*m2)-RMFE via Lemma II.5 concatenation."""
+
+    def __init__(self, base: Ring, n2: int, n1: int):
+        self.inner = BasicRMFE(base, n2)
+        self.outer = BasicRMFE(self.inner.ext, n1)
+        self.base = base
+        self.ext = self.outer.ext
+        self.n = n1 * n2
+        self.n1, self.n2 = n1, n2
+        self.m = self.inner.m * self.outer.m
+
+    def phi(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., n1*n2, baseD) -> (..., extD)."""
+        batch = x.shape[:-2]
+        xs = x.reshape(batch + (self.n1, self.n2, self.base.D))
+        mid = self.inner.phi(xs)  # (..., n1, midD)
+        return self.outer.phi(mid)  # (..., extD)
+
+    def psi(self, g: jnp.ndarray) -> jnp.ndarray:
+        mid = self.outer.psi(g)  # (..., n1, midD)
+        xs = self.inner.psi(mid)  # (..., n1, n2, baseD)
+        return xs.reshape(g.shape[:-1] + (self.n, self.base.D))
+
+
+def build_rmfe(base: Ring, n: int, min_m: int = 0):
+    """Choose a Basic or Concat RMFE automatically for batch size n."""
+    if n <= base.p**base.D:
+        return BasicRMFE(base, n, min_m=min_m)
+    # factor n = n2 * n1 with n2 <= |T(base)|
+    n2 = base.p**base.D
+    n1 = -(-n // n2)
+    return ConcatRMFE(base, n2, n1)

@@ -1,0 +1,161 @@
+"""Single-DMM optimizations via RMFE batching — EP_RMFE-I and EP_RMFE-II
+(paper §IV, Corollaries IV.1 / IV.2).
+
+Type I  (MatDot-style preprocessing): A -> n column blocks, B -> n row
+blocks, AB = sum_i A_i B_i; run Batch-EP_RMFE on the n block products and
+sum.  Optimal encoding / upload / worker compute (x1/m vs plain EP).
+
+Type II (Polynomial-style preprocessing): A -> n row blocks, B -> n column
+blocks; all n^2 pairwise A_i B_j are needed.  Two RMFE levels:
+  - level 1 packs the B blocks:      B_hat = phi1(B_1..B_n)        (inner)
+  - level 2 packs the A blocks:      A_hat = phi2(A_1..A_n)        (outer)
+  - A_i enters level 1 as a *constant* vector phi1(A_i,..,A_i) = embed(A_i),
+    and B_hat enters level 2 as embed(B_hat) = phi2(B_hat,..,B_hat),
+so ONE product over the top ring carries all n^2 cross products:
+  psi1(psi2(A_hat * B_hat)[i]) = (A_i B_1, ..., A_i B_n).
+Optimal decoding / download (x1/m vs plain EP), upload x sqrt(m).
+"""
+from __future__ import annotations
+
+from math import ceil, log
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ep_codes import EPCode, EPCosts, ep_cost_model
+from .galois import Ring
+from .rmfe import BasicRMFE
+
+__all__ = ["EPRMFE_I", "EPRMFE_II"]
+
+
+class EPRMFE_I:
+    """Single DMM, MatDot-style batch preprocessing (Cor IV.1)."""
+
+    def __init__(self, base: Ring, n: int, N: int, u: int, v: int, w: int):
+        from .batch_rmfe import BatchEPRMFE
+
+        self.base, self.n = base, n
+        self.batch = BatchEPRMFE(base, n, N, u, v, w)
+        self.ext = self.batch.ext
+        self.code = self.batch.code
+
+    @property
+    def R(self) -> int:
+        return self.batch.R
+
+    def split(self, A: jnp.ndarray, B: jnp.ndarray):
+        t, r, D = A.shape
+        r2, s, _ = B.shape
+        n = self.n
+        assert r % n == 0, f"n={n} must divide r={r}"
+        As = jnp.moveaxis(A.reshape(t, n, r // n, D), 1, 0)  # (n, t, r/n, D)
+        Bs = B.reshape(n, r // n, s, D)
+        return As, Bs
+
+    def run(self, A, B, idx: Optional[jnp.ndarray] = None):
+        As, Bs = self.split(A, B)
+        Cs = self.batch.run(As, Bs, idx)  # (n, t, s, D)
+        acc = Cs[0]
+        for i in range(1, self.n):
+            acc = self.base.add(acc, Cs[i])
+        return acc
+
+    def costs(self, t: int, r: int, s: int) -> EPCosts:
+        c = self.batch.code.costs(t, r // self.n, s, self.base, batch=self.n)
+        # the n sub-products all contribute to ONE output: download is not
+        # amortized (Cor IV.1: download O(ts/uv * m * R))
+        return EPCosts(
+            c.N, c.R, c.m_eff, c.upload, c.download * self.n,
+            c.encode_ops, c.decode_ops * self.n, c.worker_ops,
+        )
+
+
+class EPRMFE_II:
+    """Single DMM, Polynomial-style batch preprocessing, two-level RMFE
+    (Cor IV.2).
+
+    ``split_a=False`` reproduces the configuration the paper actually
+    measured (§V: "we did not split matrix A ... and applied only phi_1"
+    for small m): only B is column-split and packed; A is embedded.  This
+    halves download/decoding at upload between plain-EP and type-I.
+    """
+
+    def __init__(
+        self, base: Ring, n: int, N: int, u: int, v: int, w: int,
+        split_a: bool = True,
+    ):
+        self.base, self.n = base, n
+        self.split_a = split_a
+        # level 1 over the base, level 2 over the mid ring
+        min_m1 = ceil(log(max(N, 2)) / (log(base.p) * base.D)) if not split_a else 0
+        self.rmfe1 = BasicRMFE(base, n, min_m=min_m1)
+        self.mid = self.rmfe1.ext
+        if split_a:
+            min_m2 = ceil(log(max(N, 2)) / (log(base.p) * self.mid.D))
+            self.rmfe2 = BasicRMFE(self.mid, n, min_m=min_m2)
+            self.top = self.rmfe2.ext
+        else:
+            self.rmfe2 = None
+            self.top = self.mid
+        if self.top.p**self.top.D < N:
+            raise ValueError("top extension too small for N workers")
+        self.code = EPCode(self.top, N, u, v, w)
+
+    @property
+    def R(self) -> int:
+        return self.code.R
+
+    def pack_a(self, A: jnp.ndarray) -> jnp.ndarray:
+        """A (t, r, baseD) -> (t/n, r, topD): row blocks through phi2∘embed.
+
+        With split_a=False: A is embedded whole (paper §V configuration)."""
+        t, r, D = A.shape
+        n = self.n
+        if not self.split_a:
+            return self.top.embed_base(A, self.base)  # (t, r, topD)
+        assert t % n == 0
+        blocks = A.reshape(n, t // n, r, D)  # row blocks
+        mid_blocks = self.mid.embed_base(blocks, self.base)  # phi1(const) = embed
+        vecs = jnp.moveaxis(mid_blocks, 0, 2)  # (t/n, r, n, midD)
+        return self.rmfe2.phi(vecs)  # (t/n, r, topD)
+
+    def pack_b(self, B: jnp.ndarray) -> jnp.ndarray:
+        """B (r, s, baseD) -> (r, s/n, topD): col blocks through embed∘phi1."""
+        r, s, D = B.shape
+        n = self.n
+        assert s % n == 0
+        blocks = B.reshape(r, n, s // n, D)
+        vecs = jnp.moveaxis(blocks, 1, 2)  # (r, s/n, n, baseD)
+        mid = self.rmfe1.phi(vecs)  # (r, s/n, midD)
+        return self.top.embed_base(mid, self.mid)  # (r, s/n, topD)
+
+    def unpack(self, C: jnp.ndarray) -> jnp.ndarray:
+        """(t/n, s/n, topD) -> (t, s, baseD) assembling the n x n block grid."""
+        tb, sb, _ = C.shape
+        n = self.n
+        if not self.split_a:
+            outs = self.rmfe1.psi(C)  # (t, s/n, n_j, baseD)
+            grid = outs.transpose(0, 2, 1, 3)  # (t, n_j, s/n, D)
+            return grid.reshape(tb, n * sb, self.base.D)
+        mids = self.rmfe2.psi(C)  # (t/n, s/n, n_i, midD)
+        outs = self.rmfe1.psi(mids)  # (t/n, s/n, n_i, n_j, baseD)
+        # C block (i, j) = A_i B_j at row block i, col block j
+        grid = outs.transpose(2, 0, 3, 1, 4)  # (n_i, t/n, n_j, s/n, D)
+        return grid.reshape(n * tb, n * sb, self.base.D)
+
+    def run(self, A, B, idx: Optional[jnp.ndarray] = None):
+        Ah, Bh = self.pack_a(A), self.pack_b(B)
+        C = self.code.run(Ah, Bh, idx)
+        return self.unpack(C)
+
+    def costs(self, t: int, r: int, s: int) -> EPCosts:
+        # one EP execution on (t/n, r, s/n) over the top ring; n^2 products out
+        c = self.code.costs(t // self.n, r, s // self.n, self.base, batch=1)
+        n2 = self.n * self.n
+        return EPCosts(
+            c.N, c.R, c.m_eff,
+            c.upload, c.download,          # raw volumes of the single run
+            c.encode_ops, c.decode_ops, c.worker_ops,
+        )

@@ -1,0 +1,54 @@
+"""Straggler modelling and responsive-worker selection (traceable).
+
+The whole point of CDMM is that the master decodes from the FIRST R
+responses.  In the SPMD emulation, worker liveness is a runtime boolean mask
+(from fault injection, deadline simulation or real collective timeouts);
+``select_workers`` turns it into a worker-index vector usable by the
+traceable decoders (EPCode.decode / CSACode.decode take `idx` tracers).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["select_workers", "simulate_stragglers", "straggler_latencies"]
+
+
+def select_workers(mask: jnp.ndarray, R: int) -> jnp.ndarray:
+    """First R responsive worker indices (stable order). mask: (N,) bool.
+
+    Requires sum(mask) >= R for a valid decode; with fewer responders the
+    trailing indices repeat dead workers and the caller must treat the
+    result as failed (see `enough` flag from `simulate_stragglers`).
+    """
+    order = jnp.argsort(~mask, stable=True)
+    return order[:R].astype(jnp.int32)
+
+
+def simulate_stragglers(
+    key: jax.Array, N: int, fail_prob: float, min_live: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Random liveness mask; guarantees at least ``min_live`` workers live.
+
+    Returns (mask (N,) bool, enough: () bool — whether the raw draw already
+    had >= min_live responders before the guarantee kicked in).
+    """
+    raw = jax.random.uniform(key, (N,)) >= fail_prob
+    enough = jnp.sum(raw) >= min_live
+    # force the first min_live workers alive if the draw was too harsh —
+    # models re-dispatch/retry in a real scheduler
+    forced = jnp.where(jnp.arange(N) < min_live, True, raw)
+    mask = jnp.where(enough, raw, forced)
+    return mask, enough
+
+
+def straggler_latencies(
+    key: jax.Array, N: int, base_ms: float = 1.0, tail: float = 3.0
+) -> jnp.ndarray:
+    """Pareto-ish latency model: most workers ~base, a heavy tail of
+    stragglers.  Used by benchmarks to compute time-to-R-th-response."""
+    u = jax.random.uniform(key, (N,), minval=1e-6, maxval=1.0)
+    return base_ms * (1.0 + tail * (u ** (-0.5) - 1.0))

@@ -1,0 +1,2 @@
+"""Deterministic sharded data pipelines."""
+from .pipeline import DataConfig, TokenPipeline

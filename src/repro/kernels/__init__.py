@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the CDMM hot paths (validated via interpret mode).
+
+gr_matmul: blocked Galois-ring matmul (worker compute, encode, decode).
+"""
+from .ops import coded_encode, gr_matmul, kernel_supported, pick_blocks
+from .ref import gr_matmul_planar_ref, gr_matmul_ref
+
+__all__ = [
+    "gr_matmul",
+    "coded_encode",
+    "kernel_supported",
+    "pick_blocks",
+    "gr_matmul_ref",
+    "gr_matmul_planar_ref",
+]

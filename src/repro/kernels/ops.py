@@ -1,0 +1,73 @@
+"""Jit-ready wrappers around the Pallas Galois-ring matmul kernel.
+
+Handles layout conversion (interleaved (t, r, D) <-> planar (D, t, r)),
+padding to block multiples, block-size selection, and fallback to the jnp
+reference when the ring is outside the kernel envelope (odd p or D > MAX_D).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.galois import Ring
+
+from .gr_matmul import MAX_D, gr_matmul_planar
+from .ref import gr_matmul_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_blocks(t: int, r: int, s: int) -> Tuple[int, int, int]:
+    """MXU-aligned block sizes: multiples of 128 when the dim allows, else
+    the (padded) dim itself."""
+
+    def pick(d: int, target: int = 128) -> int:
+        return target if d >= target else _round_up(d, 8)
+
+    return pick(t), pick(s), pick(r)
+
+
+def kernel_supported(ring: Ring) -> bool:
+    return ring.p == 2 and ring.e <= 32 and ring.D <= MAX_D
+
+
+def gr_matmul(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    ring: Ring,
+    *,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+    force_ref: bool = False,
+) -> jnp.ndarray:
+    """Ring matmul (t, r, D) x (r, s, D) -> (t, s, D) via the Pallas kernel.
+
+    On CPU containers ``interpret`` defaults to True (kernel body runs in
+    python for validation); on TPU it compiles to Mosaic.
+    """
+    t, r, D = A.shape
+    r2, s, D2 = B.shape
+    assert r == r2 and D == D2 == ring.D
+    if force_ref or not kernel_supported(ring):
+        return gr_matmul_ref(A, B, ring)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bt, bs, br = blocks if blocks else pick_blocks(t, r, s)
+    tp, rp, sp = _round_up(t, bt), _round_up(r, br), _round_up(s, bs)
+    Ap = jnp.moveaxis(jnp.pad(A, ((0, tp - t), (0, rp - r), (0, 0))), -1, 0)
+    Bp = jnp.moveaxis(jnp.pad(B, ((0, rp - r), (0, sp - s), (0, 0))), -1, 0)
+    Cp = gr_matmul_planar(Ap, Bp, ring, bt=bt, bs=bs, br=br, interpret=interpret)
+    return jnp.moveaxis(Cp, 0, -1)[:t, :s]
+
+
+def coded_encode(
+    V: jnp.ndarray, blocks_mat: jnp.ndarray, ring: Ring, **kw
+) -> jnp.ndarray:
+    """CDMM encode = ring matmul against a Vandermonde slice.
+
+    V: (N, K, D); blocks_mat: (K, M, D) -> (N, M, D)."""
+    return gr_matmul(V, blocks_mat, ring, **kw)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Galois-ring matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.galois import Ring
+
+
+def gr_matmul_ref(A: jnp.ndarray, B: jnp.ndarray, ring: Ring) -> jnp.ndarray:
+    """Interleaved layout reference: (t, r, D) x (r, s, D) -> (t, s, D)."""
+    return ring.matmul(A, B)
+
+
+def gr_matmul_planar_ref(A: jnp.ndarray, B: jnp.ndarray, ring: Ring) -> jnp.ndarray:
+    """Planar layout reference: (D, t, r) x (D, r, s) -> (D, t, s)."""
+    Ai = jnp.moveaxis(A, 0, -1)
+    Bi = jnp.moveaxis(B, 0, -1)
+    Ci = ring.matmul(Ai, Bi)
+    return jnp.moveaxis(Ci, -1, 0)

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — bytes/device: proves (or disproves) HBM fit
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * collective schedule + payload bytes parsed from the compiled HLO
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and are
+consumed by launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cells  # noqa: E402
+from repro.launch.costmodel import analytic_costs  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell, lower_cell  # noqa: E402
+from repro.runtime.sharding import param_bytes, param_count  # noqa: E402
+
+ART_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"),
+)
+
+
+def _mem_dict(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip] {path} exists")
+        return json.load(open(path))
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "status": "ok",
+    }
+    try:
+        cell = build_cell(cfg, shape)
+        rec["param_count"] = param_count(cell.api.param_specs)
+        rec["param_bytes"] = param_bytes(cell.api.param_specs)
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = dict(compiled.cost_analysis() or {})
+        mem = _mem_dict(compiled)
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        ac = analytic_costs(cfg, shape)
+        terms = roofline_terms(cost, text, chips, analytic=ac)
+        rec.update(
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            cost={k: float(v) for k, v in cost.items() if np.isscalar(v)},
+            memory=mem,
+            collectives=coll,
+            roofline=terms,
+        )
+        per_dev = (
+            mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        )
+        rec["bytes_per_device"] = per_dev
+        rec["fits_16gb"] = bool(per_dev <= 16 * 2**30) if per_dev else None
+        print(
+            f"[ok] {arch} {shape_name} {mesh_kind}: "
+            f"compile={t_compile:.1f}s flops/chip={terms['flops_per_chip']:.3g} "
+            f"coll={terms['collective_bytes_per_chip']:.3g}B "
+            f"dom={terms['dominant']} frac={terms['roofline_fraction']:.3f} "
+            f"mem/dev={per_dev/2**30:.2f}GiB"
+        )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} {shape_name} {mesh_kind}: {rec['error']}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs 512 host devices; do not import jax before this module"
+    )
+    todo = []
+    for arch, shape_name, skipped in cells(include_skipped=True):
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape_name != args.shape:
+            continue
+        if skipped:
+            # record the documented skip (long_500k on quadratic-attention archs)
+            os.makedirs(ART_DIR, exist_ok=True)
+            for mesh_kind in ("single", "multi"):
+                path = os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+                if not os.path.exists(path):
+                    json.dump(
+                        {
+                            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                            "status": "skipped",
+                            "reason": "long_500k needs sub-quadratic attention "
+                            "(DESIGN.md §4)",
+                        },
+                        open(path, "w"), indent=1,
+                    )
+            continue
+        for mesh_kind in ("single", "multi"):
+            if args.mesh and mesh_kind != args.mesh:
+                continue
+            todo.append((arch, shape_name, mesh_kind))
+
+    print(f"dry-run: {len(todo)} cells")
+    n_ok = n_fail = 0
+    for arch, shape_name, mesh_kind in todo:
+        rec = run_cell(arch, shape_name, mesh_kind, force=args.force)
+        if rec.get("status") == "ok":
+            n_ok += 1
+        elif rec.get("status") == "error":
+            n_fail += 1
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

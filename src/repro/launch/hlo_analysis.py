@@ -1,0 +1,220 @@
+"""Extract roofline terms from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak)          [cost_analysis]
+memory term     = HLO_bytes / (chips * hbm_bw)        [cost_analysis]
+collective term = collective_bytes / (chips * link_bw)[parsed from HLO text]
+
+cost_analysis of the SPMD-partitioned module is per-device, so the flops /
+bytes it reports are already divided by the device count; we therefore use
+per-chip peaks directly.  collective_bytes sums the RESULT buffer sizes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute in the per-device program (documented approximation:
+result size ~ payload per hop).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e-ish constants from the assignment
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALLEE = re.compile(
+    r"(?:body|condition|to_apply|called_computations=\{|branch_computations=\{)"
+    r"[=]?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)"
+)
+
+
+def _split_computations(hlo_text: str):
+    """name -> list of instruction lines (handles the flat HLO text format)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if s.endswith("{") and ("(" in s or s.startswith("ENTRY")):
+            m = _COMP_HEAD.match(s)
+            if m and not s.startswith(("while", "fusion")):
+                cur = m.group(1)
+                comps[cur] = []
+                if raw.startswith("ENTRY") or s.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count of a canonical lax.scan/fori condition: compare(i, C), LT."""
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    for ln in cond_lines:
+        if "compare(" in ln and "direction=LT" in ln:
+            return max(consts) if consts else 1
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Trip-count-aware collective payload accounting.
+
+    XLA prints a while body once; its collectives execute trip-count times.
+    We walk the computation graph from ENTRY, multiplying by parsed loop
+    bounds (canonical lax.scan conditions), so collectives inside scanned
+    layers are charged correctly.
+    """
+    comps, entry = _split_computations(hlo_text)
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    if entry is None:
+        return out
+
+    import functools
+
+    call_re = re.compile(
+        r"(?:body=%?([\w\.\-]+)|condition=%?([\w\.\-]+)|to_apply=%?([\w\.\-]+)"
+        r"|calls=%?([\w\.\-]+))"
+    )
+
+    def local_and_edges(name):
+        local = {k: 0 for k in _COLLECTIVES}
+        nloc = 0
+        edges = []  # (callee, multiplier_is_loop_body, cond_name)
+        for ln in comps.get(name, []):
+            if "=" in ln:
+                rhs = ln.split("=", 1)[1]
+                for kind in _COLLECTIVES:
+                    if re.search(rf"\b{kind}(-start)?\(", rhs) and "-done" not in rhs.split("(")[0]:
+                        local[kind] += _shape_bytes(rhs.split(f" {kind}")[0])
+                        nloc += 1
+                        break
+            body = re.search(r"body=%?([\w\.\-]+)", ln)
+            cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+            if body:
+                edges.append((body.group(1), cond.group(1) if cond else None))
+            for pat in (r"to_apply=%?([\w\.\-]+)", r"calls=%?([\w\.\-]+)"):
+                m = re.search(pat, ln)
+                if m and not body:
+                    edges.append((m.group(1), None))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if bm:
+                for b in bm.group(1).split(","):
+                    edges.append((b.strip().lstrip("%"), None))
+        return local, nloc, edges
+
+    seen_stack = set()
+
+    @functools.lru_cache(maxsize=None)
+    def total(name):
+        if name in seen_stack or name not in comps:
+            return {k: 0 for k in _COLLECTIVES}, 0
+        seen_stack.add(name)
+        local, nloc, edges = local_and_edges(name)
+        agg = dict(local)
+        n = nloc
+        for callee, cond in edges:
+            sub, subn = total(callee)
+            mult = _trip_count(comps.get(cond, [])) if cond else 1
+            for k in _COLLECTIVES:
+                agg[k] += sub[k] * mult
+            n += subn * mult
+        seen_stack.discard(name)
+        return agg, n
+
+    agg, n = total(entry)
+    out.update(agg)
+    out["count"] = n
+    return out
+
+
+def roofline_terms(
+    cost: Dict, hlo_text: str, chips: int, analytic=None
+) -> Dict[str, float]:
+    """Three roofline terms in seconds.
+
+    compute/memory come from the analytic model when provided (XLA's
+    cost_analysis counts while bodies once — see costmodel.py); the raw XLA
+    numbers are reported alongside.  Collectives come from the compiled HLO
+    with while-trip multipliers.
+    """
+    flops_raw = float(cost.get("flops", 0.0) or 0.0)
+    bytes_raw = float(cost.get("bytes accessed", 0.0) or 0.0)
+    coll = collective_bytes(hlo_text)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+    if analytic is not None:
+        flops = analytic.total_flops / chips
+        mem_bytes = analytic.hbm_bytes / chips
+    else:
+        flops, mem_bytes = flops_raw, bytes_raw
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_collective = cbytes / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    rec = {
+        "hlo_flops_per_chip_raw": flops_raw,
+        "hlo_bytes_per_chip_raw": bytes_raw,
+        "flops_per_chip": flops,
+        "bytes_per_chip": mem_bytes,
+        "collective_bytes_per_chip": cbytes,
+        "collective_ops": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_fraction": (
+            t_compute / max(t_compute, t_memory, t_collective, 1e-30)
+        ),
+    }
+    if analytic is not None:
+        rec["model_flops"] = analytic.model_flops
+        rec["useful_ratio"] = analytic.model_flops / max(analytic.total_flops, 1e-30)
+        rec["param_count"] = analytic.param_count
+        rec["active_param_count"] = analytic.active_param_count
+    return rec
+
+
+def model_flops(cfg, shape, param_count: int, active_param_count: int) -> float:
+    """6*N*D for train, 2*N*D for forward-only, per the assignment."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n = active_param_count
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n * tokens

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the "pod"
+axis carries data parallelism (and optionally ZeRO / pipeline stages) over
+the slower inter-pod links.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh over however many host devices exist (tests/examples)."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    assert len(devs) >= n, (len(devs), shape)
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)

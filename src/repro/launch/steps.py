@@ -1,0 +1,181 @@
+"""Step builders shared by train.py / serve.py / dryrun.py.
+
+A "cell" = (architecture, input shape, mesh).  This module turns a cell into
+a jit-able step function plus the ShapeDtypeStruct stand-ins (with
+NamedShardings) for every input — the dry-run lowers exactly what the real
+launcher runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import ModelAPI, build_model
+from repro.optim import OptConfig, opt_state_specs, opt_init, opt_update
+from repro.runtime.sharding import (
+    ParamSpec,
+    axis_rules,
+    shape_structs,
+    sharding_tree,
+)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, tp: int = 16) -> Dict[str, Any]:
+    """Per-cell logical->physical overrides on top of DEFAULT_RULES.
+
+    Attention layout mode (perf iteration 1, see EXPERIMENTS.md §Perf):
+      * heads and kv heads divisible by tp  -> pure head-TP (fastest)
+      * heads divisible, kv not             -> head-TP with replicated KV
+      * heads not divisible                 -> sequence-parallel attention:
+        Q sharded over seq/model, K/V gathered (kills the partial-scores
+        all-reduce that dominated the baseline)
+    """
+    rules: Dict[str, Any] = {"fsdp": cfg.fsdp_axes if len(cfg.fsdp_axes) > 1 else cfg.fsdp_axes[0]}
+    if shape.kind in ("train", "prefill") and shape.seq_len % tp == 0:
+        # Megatron-SP residual layout (perf iter K4).  First attempt (K2) was
+        # refuted — the replicated-token MoE island forced a gather per MoE
+        # layer; with the all-to-all EP island the SP layout wins everywhere:
+        # scan-boundary activations shrink 16x and bwd psums become
+        # reduce-scatters.
+        rules["residual_seq"] = "model"
+    heads_ok = cfg.num_heads and cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads and cfg.num_kv_heads % tp == 0
+    if cfg.num_heads:
+        kv_dim = cfg.num_kv_heads * cfg.hd
+        small_kv = kv_dim * 2 <= cfg.d_model // 2  # GQA: K/V much smaller than x
+        if not heads_ok or (shape.kind != "decode" and small_kv):
+            # context-parallel attention (perf iter K5): Q stays seq-sharded,
+            # K/V are gathered — with GQA the gathered K/V is far smaller
+            # than the 4x full-activation SP<->TP transitions of head-TP
+            rules["heads"] = None
+            rules["kv_heads"] = None
+            if shape.kind != "decode":
+                rules["q_seq"] = "model"
+                rules["residual_seq"] = "model"
+                # NOTE (perf iter 3, REFUTED): dropping ffn/qkv tensor
+                # sharding in favour of pure SP doubles collective traffic —
+                # per-layer FSDP weight gathers (105 GB) exceed the Megatron
+                # seq<->tensor transitions (45 GB).  Keep TP for FFN/QKV.
+        elif not kv_ok:
+            rules["kv_heads"] = None  # replicate K/V heads (small for GQA)
+    if shape.kind == "decode":
+        # split-K decode: KV-cache sequence sharded over model (and data for
+        # the 500k single-request cell, where batch can't shard)
+        rules["cache_seq"] = ("data", "model") if shape.global_batch == 1 else "model"
+        # decode latency = weight reads: keep weights RESIDENT (model-sharded
+        # only) whenever they fit, instead of ZeRO-gathering every step
+        # (perf iter Z2).  Only the 1T MoE genuinely needs fsdp for serving.
+        from repro.launch.costmodel import _param_counts
+
+        pbytes = _param_counts(cfg)["total"] * 2.0
+        if pbytes / tp <= 12 * 2**30:
+            rules["fsdp"] = None
+    if shape.kind in ("train", "prefill") and shape.seq_len >= 262144:
+        rules["seq"] = "data"  # context parallelism for very long sequences
+    return rules
+
+
+def opt_config_for(cfg: ModelConfig, total_steps: int = 10_000) -> OptConfig:
+    return OptConfig(
+        name=cfg.optimizer,
+        state_dtype=cfg.opt_state_dtype,
+        total_steps=total_steps,
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    api: ModelAPI
+    step_fn: Any            # the python callable to jit
+    arg_specs: Tuple        # ParamSpec trees, one per argument
+    donate: Tuple[int, ...]
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig) -> Cell:
+    api = build_model(cfg)
+    if shape.kind == "train":
+        ocfg = opt_config_for(cfg)
+        A = max(1, cfg.grad_accum)
+
+        def train_step(params, opt_state, batch):
+            if A == 1:
+                (loss, _), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(
+                    params, batch
+                )
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch
+                )
+
+                def micro(carry, b):
+                    gacc, lacc = carry
+                    (l, _), g = jax.value_and_grad(api.loss_fn, has_aux=True)(
+                        params, b
+                    )
+                    gacc = jax.tree.map(lambda a, x: a + x.astype(a.dtype), gacc, g)
+                    return (gacc, lacc + l), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+                (gsum, lsum), _ = jax.lax.scan(
+                    micro, (g0, jnp.zeros((), jnp.float32)), mb
+                )
+                grads = jax.tree.map(lambda g: g / A, gsum)
+                loss = lsum / A
+            new_params, new_state, om = opt_update(ocfg, grads, opt_state, params)
+            return new_params, new_state, dict(loss=loss, **om)
+
+        ostate = opt_state_specs(ocfg, api.param_specs)
+        return Cell(
+            cfg, shape, api, train_step,
+            (api.param_specs, ostate, api.batch_specs(shape)),
+            donate=(0, 1),
+        )
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return api.prefill_fn(params, batch)
+
+        return Cell(cfg, shape, api, prefill_step,
+                    (api.param_specs, api.batch_specs(shape)), donate=())
+    # decode
+    def serve_step(params, cache, batch):
+        return api.decode_fn(params, cache, batch)
+
+    return Cell(
+        cfg, shape, api, serve_step,
+        (api.param_specs, api.cache_decl(shape), api.batch_specs(shape)),
+        donate=(1,),
+    )
+
+
+def cell_structs(cell: Cell, mesh: Optional[Mesh]):
+    """ShapeDtypeStructs (with shardings) for every step argument."""
+    rules = rules_for(cell.cfg, cell.shape)
+    return tuple(shape_structs(t, mesh, {**_merged(rules)}) for t in cell.arg_specs)
+
+
+def _merged(rules):
+    from repro.runtime.sharding import DEFAULT_RULES
+
+    out = dict(DEFAULT_RULES)
+    out.update(rules)
+    return out
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit + lower the cell on the mesh (no execution, no allocation)."""
+    rules = rules_for(cell.cfg, cell.shape)
+    structs = cell_structs(cell, mesh)
+    fn = jax.jit(cell.step_fn, donate_argnums=cell.donate)
+    with mesh:
+        with axis_rules(mesh, rules):
+            lowered = fn.lower(*structs)
+    return lowered

@@ -1,0 +1,2 @@
+"""LM model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM architectures."""
+from .registry import ModelAPI, build_model, cross_entropy

@@ -1,0 +1,222 @@
+"""Uniform model API: every architecture exposes
+
+    param_specs()                  -> ParamSpec tree
+    loss_fn(params, batch)         -> (loss, metrics)        [train_step target]
+    prefill_fn(params, batch)      -> logits                 [prefill cells]
+    decode_fn(params, cache, batch)-> (logits, new_cache)    [decode cells]
+    batch_specs(shape)             -> input ParamSpec tree (ShapeDtypeStruct-able)
+    cache_decl(shape)              -> cache ParamSpec tree + scalar "len"
+
+so the launcher / dry-run treat all 10 archs identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.runtime.sharding import ParamSpec
+
+from . import ssm as ssm_mod
+from . import transformer as tf_mod
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked CE; labels < 0 are ignored.  logits (B,S,V) f32, labels (B,S)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom, denom
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    param_specs: Dict
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    batch_specs: Callable[[ShapeConfig], Dict]
+    cache_decl: Callable[[ShapeConfig], Dict]
+
+
+# ---------------------------------------------------------------------------
+# input declarations
+# ---------------------------------------------------------------------------
+
+
+def _lm_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok = ("batch", "seq")
+    if shape.kind == "train":
+        return {
+            "tokens": ParamSpec((B, S), tok, jnp.int32),
+            "labels": ParamSpec((B, S), tok, jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": ParamSpec((B, S), tok, jnp.int32)}
+    # decode: one new token against a cache of length S
+    return {"tokens": ParamSpec((B, 1), ("batch", None), jnp.int32)}
+
+
+def _vlm_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    base = _lm_batch_specs(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        B = shape.global_batch
+        P = cfg.frontend_len
+        S_text = shape.seq_len - P
+        base["tokens"] = ParamSpec((B, S_text), ("batch", "seq"), jnp.int32)
+        if "labels" in base:
+            base["labels"] = ParamSpec((B, S_text), ("batch", "seq"), jnp.int32)
+        base["patches"] = ParamSpec(
+            (B, P, cfg.frontend_dim), ("batch", None, None), jnp.float32
+        )
+    return base
+
+
+def _encdec_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    Ssrc = max(S // cfg.src_ratio, 16)
+    base = _lm_batch_specs(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        base["frames"] = ParamSpec(
+            (B, Ssrc, cfg.frontend_dim), ("batch", "seq", None), jnp.float32
+        )
+    return base
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+
+
+def _build_decoder_family(cfg: ModelConfig) -> ModelAPI:
+    specs = tf_mod.decoder_specs(cfg)
+    is_vlm = cfg.family == "vlm"
+    is_encdec = cfg.family == "encdec"
+
+    def loss_fn(params, batch):
+        kw = {}
+        if is_vlm:
+            kw["patches"] = batch["patches"]
+        if is_encdec:
+            enc_out = tf_mod.encoder_forward(params, batch["frames"], cfg)
+            B, Ssrc = enc_out.shape[:2]
+            kw["enc_out"] = enc_out
+            kw["src_positions"] = jnp.broadcast_to(
+                jnp.arange(Ssrc, dtype=jnp.int32)[None], (B, Ssrc)
+            )
+        logits, _, aux = tf_mod.decoder_forward(params, batch["tokens"], cfg, **kw)
+        if is_vlm:
+            logits = logits[:, cfg.frontend_len :]
+        loss, ntok = cross_entropy(logits, batch["labels"])
+        total = loss + AUX_WEIGHT * aux
+        return total, {"ce": loss, "aux": aux, "ntok": ntok}
+
+    def prefill_fn(params, batch):
+        kw = {}
+        if is_vlm:
+            kw["patches"] = batch["patches"]
+        if is_encdec:
+            enc_out = tf_mod.encoder_forward(params, batch["frames"], cfg)
+            B, Ssrc = enc_out.shape[:2]
+            kw["enc_out"] = enc_out
+            kw["src_positions"] = jnp.broadcast_to(
+                jnp.arange(Ssrc, dtype=jnp.int32)[None], (B, Ssrc)
+            )
+        logits, _, _ = tf_mod.decoder_forward(params, batch["tokens"], cfg, **kw)
+        return logits[:, -1:]
+
+    def decode_fn(params, cache, batch):
+        logits, new_cache, _ = tf_mod.decoder_forward(
+            params, batch["tokens"], cfg, cache=cache, cache_len=cache["len"]
+        )
+        return logits, new_cache
+
+    def cache_decl(shape: ShapeConfig):
+        B = shape.global_batch
+        Ssrc = max(shape.seq_len // cfg.src_ratio, 16) if is_encdec else 0
+        decl = tf_mod.cache_specs(cfg, B, shape.seq_len, src_len=Ssrc)
+        decl["len"] = ParamSpec((), (), jnp.int32, "zeros")
+        return decl
+
+    bspecs = (
+        _vlm_batch_specs if is_vlm else _encdec_batch_specs if is_encdec else _lm_batch_specs
+    )
+    return ModelAPI(
+        cfg, specs, loss_fn, prefill_fn, decode_fn,
+        lambda s: bspecs(cfg, s), cache_decl,
+    )
+
+
+def _build_mamba(cfg: ModelConfig) -> ModelAPI:
+    specs = ssm_mod.mamba_specs(cfg)
+
+    def loss_fn(params, batch):
+        logits, _, _ = ssm_mod.mamba_forward(params, batch["tokens"], cfg)
+        loss, ntok = cross_entropy(logits, batch["labels"])
+        return loss, {"ce": loss, "ntok": ntok}
+
+    def prefill_fn(params, batch):
+        logits, _, _ = ssm_mod.mamba_forward(params, batch["tokens"], cfg)
+        return logits[:, -1:]
+
+    def decode_fn(params, cache, batch):
+        logits, new_cache, _ = ssm_mod.mamba_forward(
+            params, batch["tokens"], cfg, cache=cache
+        )
+        return logits, new_cache
+
+    def cache_decl(shape: ShapeConfig):
+        return ssm_mod.mamba_cache_specs(cfg, shape.global_batch)
+
+    return ModelAPI(
+        cfg, specs, loss_fn, prefill_fn, decode_fn,
+        lambda s: _lm_batch_specs(cfg, s), cache_decl,
+    )
+
+
+def _build_zamba(cfg: ModelConfig) -> ModelAPI:
+    specs = ssm_mod.zamba_specs(cfg)
+
+    def loss_fn(params, batch):
+        logits, _, _ = ssm_mod.zamba_forward(params, batch["tokens"], cfg)
+        loss, ntok = cross_entropy(logits, batch["labels"])
+        return loss, {"ce": loss, "ntok": ntok}
+
+    def prefill_fn(params, batch):
+        logits, _, _ = ssm_mod.zamba_forward(params, batch["tokens"], cfg)
+        return logits[:, -1:]
+
+    def decode_fn(params, cache, batch):
+        logits, new_cache, _ = ssm_mod.zamba_forward(
+            params, batch["tokens"], cfg, cache=cache, cache_len=cache["len"]
+        )
+        return logits, new_cache
+
+    def cache_decl(shape: ShapeConfig):
+        decl = ssm_mod.zamba_cache_specs(cfg, shape.global_batch, shape.seq_len)
+        decl["len"] = ParamSpec((), (), jnp.int32, "zeros")
+        return decl
+
+    return ModelAPI(
+        cfg, specs, loss_fn, prefill_fn, decode_fn,
+        lambda s: _lm_batch_specs(cfg, s), cache_decl,
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "ssm":
+        return _build_mamba(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    return _build_decoder_family(cfg)

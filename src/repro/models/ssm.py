@@ -1,0 +1,258 @@
+"""Mamba2 (SSD) language model and the Zamba2 hybrid (Mamba2 + shared
+attention block every k layers)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import ParamSpec, shard
+
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    apply_ssd,
+    attention_block,
+    attention_specs,
+    mlp_specs,
+    norm_specs,
+    softcap,
+    ssd_specs,
+)
+from .transformer import _maybe_remat, stack_specs
+
+# ---------------------------------------------------------------------------
+# Mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    unit = {"ln": norm_specs(cfg, d), "ssd": ssd_specs(cfg)}
+    return {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "fsdp"), init="embed", scale=0.02),
+        "blocks": stack_specs(unit, cfg.num_layers),
+        "ln_f": norm_specs(cfg, d),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int) -> Dict:
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    U = cfg.num_layers
+    return {
+        "conv": ParamSpec(
+            (U, batch, cfg.ssm_conv - 1, conv_dim), (None, "batch", None, "ffn")
+        ),
+        "state": ParamSpec(
+            (U, batch, H, N, cfg.ssm_head_dim),
+            (None, "batch", "ssm_heads", "state", None),
+            jnp.float32,
+        ),
+    }
+
+
+def mamba_forward(
+    params: Dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x = shard(x, "batch", "seq", None)
+
+    def unit(carry, xs):
+        x, _aux = carry
+        up, ucache = xs
+        h, nc = apply_ssd(up["ssd"], apply_norm(up["ln"], x, cfg), cfg, cache=ucache)
+        return (x + h, _aux), nc
+
+    unit = _maybe_remat(unit, cfg)
+    if cache is None:
+        (x, _), _ = lax.scan(
+            lambda c, up: (unit(c, (up, None))[0], None),
+            (x, jnp.zeros((), jnp.float32)),
+            params["blocks"],
+        )
+        new_cache = None
+    else:
+        (x, _), ncs = lax.scan(
+            unit, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache)
+        )
+        new_cache = ncs
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = x @ params["embed"].T.astype(cfg.adtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab"), new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+def _shared_block_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    return {
+        "ln_in": norm_specs(cfg, 2 * d),
+        "proj_in": ParamSpec((2 * d, d), ("fsdp", None)),
+        "ln_attn": norm_specs(cfg, d),
+        "attn": attention_specs(cfg),
+        "ln_mlp": norm_specs(cfg, d),
+        "mlp": mlp_specs(cfg, d, cfg.d_ff),
+    }
+
+
+def zamba_units(cfg: ModelConfig) -> Tuple[int, int]:
+    U = cfg.num_layers // cfg.shared_attn_every
+    tail = cfg.num_layers % cfg.shared_attn_every
+    return U, tail
+
+
+def zamba_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    U, tail = zamba_units(cfg)
+    munit = {
+        f"m{i}": {"ln": norm_specs(cfg, d), "ssd": ssd_specs(cfg)}
+        for i in range(cfg.shared_attn_every)
+    }
+    specs = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "fsdp"), init="embed", scale=0.02),
+        "blocks": stack_specs(munit, U),
+        "shared": _shared_block_specs(cfg),  # ONE set of attn params, reused U times
+        "ln_f": norm_specs(cfg, d),
+    }
+    if tail:
+        specs["tail"] = {
+            f"t{i}": {"ln": norm_specs(cfg, d), "ssd": ssd_specs(cfg)}
+            for i in range(tail)
+        }
+    return specs
+
+
+def zamba_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    U, tail = zamba_units(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    E = cfg.shared_attn_every
+    c: Dict[str, Any] = {
+        "conv": ParamSpec((U, E, batch, cfg.ssm_conv - 1, conv_dim), (None, None, "batch", None, "ffn")),
+        "state": ParamSpec(
+            (U, E, batch, H, N, cfg.ssm_head_dim),
+            (None, None, "batch", "ssm_heads", "state", None), jnp.float32,
+        ),
+        # per-application KV cache for the shared attention block
+        "shared_k": ParamSpec((U, batch, cache_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+        "shared_v": ParamSpec((U, batch, cache_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+    }
+    if tail:
+        c["tail_conv"] = ParamSpec((tail, batch, cfg.ssm_conv - 1, conv_dim), (None, "batch", None, "ffn"))
+        c["tail_state"] = ParamSpec(
+            (tail, batch, H, N, cfg.ssm_head_dim),
+            (None, "batch", "ssm_heads", "state", None), jnp.float32,
+        )
+    return c
+
+
+def zamba_forward(
+    params: Dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    B, S = tokens.shape
+    U, tail = zamba_units(cfg)
+    E = cfg.shared_attn_every
+    x0 = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x0 = shard(x0, "batch", "seq", None)
+    start = cache_len if cache_len is not None else jnp.zeros((), jnp.int32)
+    positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+    shared = params["shared"]
+
+    def shared_apply(x, kcache):
+        """Shared attention block on concat(x, x0) (Zamba wiring)."""
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = apply_norm(shared["ln_in"], h, cfg) @ shared["proj_in"]
+        a, nc = attention_block(
+            shared["attn"], apply_norm(shared["ln_attn"], h, cfg), positions, cfg,
+            layer_type="global", cache=kcache,
+        )
+        h = h + a
+        h = h + apply_mlp(shared["mlp"], apply_norm(shared["ln_mlp"], h, cfg), cfg)
+        return x + h, nc
+
+    def unit(carry, xs):
+        x, _ = carry
+        up, ucache = xs
+        ncs = {} if ucache is not None else None
+        for i in range(E):
+            lc = None
+            if ucache is not None:
+                lc = {"conv": ucache["conv"][i], "state": ucache["state"][i]}
+            h, nc = apply_ssd(up[f"m{i}"]["ssd"], apply_norm(up[f"m{i}"]["ln"], x, cfg), cfg, cache=lc)
+            x = x + h
+            if ncs is not None:
+                ncs.setdefault("conv", []).append(nc["conv"])
+                ncs.setdefault("state", []).append(nc["state"])
+        kcache = None
+        if ucache is not None:
+            kcache = {"k": ucache["shared_k"], "v": ucache["shared_v"], "len": ucache["len"]}
+        x, knc = shared_apply(x, kcache)
+        out_cache = None
+        if ncs is not None:
+            out_cache = {
+                "conv": jnp.stack(ncs["conv"]),
+                "state": jnp.stack(ncs["state"]),
+                "shared_k": knc["k"],
+                "shared_v": knc["v"],
+            }
+        return (x, carry[1]), out_cache
+
+    unit = _maybe_remat(unit, cfg)
+    if cache is None:
+        (x, _), _ = lax.scan(
+            lambda c, up: (unit(c, (up, None))[0], None),
+            (x0, jnp.zeros((), jnp.float32)),
+            params["blocks"],
+        )
+        new_cache = None
+    else:
+        xs_cache = {
+            "conv": cache["conv"],
+            "state": cache["state"],
+            "shared_k": cache["shared_k"],
+            "shared_v": cache["shared_v"],
+            "len": jnp.broadcast_to(cache["len"], (U,)),
+        }
+        (x, _), ncs = lax.scan(unit, (x0, jnp.zeros((), jnp.float32)), (params["blocks"], xs_cache))
+        new_cache = dict(ncs)
+        new_cache["len"] = cache["len"] + S
+    # tail mamba layers (unscanned)
+    if tail:
+        new_tc, new_ts = [], []
+        for i in range(tail):
+            tp = params["tail"][f"t{i}"]
+            lc = None
+            if cache is not None:
+                lc = {"conv": cache["tail_conv"][i], "state": cache["tail_state"][i]}
+            h, nc = apply_ssd(tp["ssd"], apply_norm(tp["ln"], x, cfg), cfg, cache=lc)
+            x = x + h
+            if cache is not None:
+                new_tc.append(nc["conv"])
+                new_ts.append(nc["state"])
+        if cache is not None:
+            new_cache["tail_conv"] = jnp.stack(new_tc)
+            new_cache["tail_state"] = jnp.stack(new_ts)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = x @ params["embed"].T.astype(cfg.adtype)
+    return shard(logits, "batch", "seq", "vocab"), new_cache, jnp.zeros((), jnp.float32)

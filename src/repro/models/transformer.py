@@ -1,0 +1,334 @@
+"""Decoder-only transformer (dense + MoE + VLM prefix) and encoder-decoder.
+
+Compile-time discipline: layers are grouped into the config's repeating
+``layer_pattern`` unit and scanned (stacked params), so a 95-layer model
+lowers as one scan — essential for the 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import ParamSpec, shard
+
+from .layers import (
+    apply_mlp,
+    apply_moe,
+    apply_norm,
+    attention_block,
+    attention_specs,
+    mlp_specs,
+    moe_specs,
+    norm_specs,
+    softcap,
+)
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scanned-units dim to every ParamSpec leaf."""
+    if isinstance(tree, dict):
+        return {k: stack_specs(v, n) for k, v in tree.items()}
+    ps: ParamSpec = tree
+    return ParamSpec((n,) + ps.shape, (None,) + ps.logical, ps.dtype, ps.init, ps.scale)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def num_units(cfg: ModelConfig) -> int:
+    pat = len(cfg.layer_pattern)
+    layers = cfg.num_layers - cfg.first_k_dense
+    assert layers % pat == 0, (cfg.name, layers, pat)
+    return layers // pat
+
+
+def _sub_block_specs(cfg: ModelConfig, moe: bool) -> Dict:
+    d = cfg.d_model
+    p = {
+        "ln_attn": norm_specs(cfg, d),
+        "attn": attention_specs(cfg),
+        "ln_mlp": norm_specs(cfg, d),
+    }
+    if moe:
+        p["moe"] = moe_specs(cfg)
+    else:
+        p["mlp"] = mlp_specs(cfg, d, cfg.d_ff)
+    return p
+
+
+def decoder_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    moe = cfg.family == "moe"
+    unit = {
+        f"l{i}": _sub_block_specs(cfg, moe) for i in range(len(cfg.layer_pattern))
+    }
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "fsdp"), init="embed", scale=0.02),
+        "blocks": stack_specs(unit, num_units(cfg)),
+        "ln_f": norm_specs(cfg, d),
+    }
+    if cfg.first_k_dense:
+        specs["prefix"] = {
+            f"p{i}": _sub_block_specs(cfg, moe=False) for i in range(cfg.first_k_dense)
+        }
+    if cfg.frontend == "patch":
+        specs["frontend_proj"] = ParamSpec((cfg.frontend_dim, d), ("frontend", "fsdp"))
+    if cfg.family == "encdec":
+        enc_unit = {"l0": _sub_block_specs(cfg, moe=False)}
+        specs["encoder"] = {
+            "blocks": stack_specs(enc_unit, cfg.encoder_layers),
+            "ln_f": norm_specs(cfg, d),
+            "frontend_proj": ParamSpec((cfg.frontend_dim, d), ("frontend", "fsdp")),
+        }
+        for i in range(len(cfg.layer_pattern)):
+            unit[f"l{i}"]["ln_xattn"] = norm_specs(cfg, d)
+            unit[f"l{i}"]["xattn"] = attention_specs(cfg)
+        specs["blocks"] = stack_specs(unit, num_units(cfg))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# cache declaration
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, src_len: int = 0) -> Dict:
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    U = num_units(cfg)
+    L = len(cfg.layer_pattern)
+    kv = lambda n: {
+        "k": ParamSpec((n, batch, cache_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+        "v": ParamSpec((n, batch, cache_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+    }
+    c: Dict[str, Any] = {f"l{i}": kv(U) for i in range(L)}
+    if cfg.first_k_dense:
+        c["prefix"] = {
+            f"p{i}": {
+                "k": ParamSpec((batch, cache_len, KV, hd), ("batch", "cache_seq", "kv_heads", None)),
+                "v": ParamSpec((batch, cache_len, KV, hd), ("batch", "cache_seq", "kv_heads", None)),
+            }
+            for i in range(cfg.first_k_dense)
+        }
+    if cfg.family == "encdec":
+        # cross-attention K/V computed once from the encoder output
+        c["xkv"] = {
+            f"l{i}": {
+                "k": ParamSpec((U, batch, src_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+                "v": ParamSpec((U, batch, src_len, KV, hd), (None, "batch", "cache_seq", "kv_heads", None)),
+            }
+            for i in range(L)
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _one_layer(
+    lp: Dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    layer_type: str,
+    lcache: Optional[Dict],
+    xattn_kv=None,
+):
+    """pre-LN attention + (moe|mlp); returns (x, new_cache, aux)."""
+    h, new_cache = attention_block(
+        lp["attn"], apply_norm(lp["ln_attn"], x, cfg), positions, cfg,
+        layer_type=layer_type, cache=lcache,
+    )
+    x = x + h
+    if xattn_kv is not None:
+        hx, _ = attention_block(
+            lp["xattn"], apply_norm(lp["ln_xattn"], x, cfg), positions, cfg,
+            layer_type="global", causal=False, xattn_kv=xattn_kv,
+        )
+        x = x + hx
+    aux = jnp.zeros((), jnp.float32)
+    h2in = apply_norm(lp["ln_mlp"], x, cfg)
+    if "moe" in lp:
+        h2, aux = apply_moe(lp["moe"], h2in, cfg)
+    else:
+        h2 = apply_mlp(lp["mlp"], h2in, cfg)
+    return x + h2, new_cache, aux
+
+
+def _unit_fn(cfg: ModelConfig, positions, encdec_xkv_from=None):
+    """Builds the scanned unit function: carry=(x, aux), xs=(params, cache)."""
+    L = len(cfg.layer_pattern)
+
+    def unit(carry, xs):
+        x, aux = carry
+        up, ucache = xs
+        new_cache = {} if ucache is not None else None
+        for i, lt in enumerate(cfg.layer_pattern):
+            lc = ucache[f"l{i}"] if ucache is not None else None
+            if lc is not None and "len" not in lc:
+                lc = dict(lc, len=ucache["len"])
+            xkv = None
+            if encdec_xkv_from is not None:
+                xk = up[f"l{i}"].get("xattn") is not None
+                if xk:
+                    xkv = encdec_xkv_from(up[f"l{i}"], i, ucache)
+            x, nc, a = _one_layer(up[f"l{i}"], x, positions, cfg, lt, lc, xkv)
+            aux = aux + a
+            if new_cache is not None:
+                new_cache[f"l{i}"] = {"k": nc["k"], "v": nc["v"]}
+        return (x, aux), new_cache
+
+    return unit
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def decoder_forward(
+    params: Dict,
+    tokens: jnp.ndarray,  # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    patches: Optional[jnp.ndarray] = None,  # (B, P, frontend_dim) for VLM
+    enc_out: Optional[jnp.ndarray] = None,  # (B, Ssrc, d) for enc-dec
+    src_positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (logits, new_cache, aux_loss)."""
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    start = cache_len if cache_len is not None else jnp.zeros((), jnp.int32)
+    if patches is not None:
+        pe = (patches.astype(cfg.adtype) @ params["frontend_proj"]).astype(cfg.adtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    x = shard(x, "batch", "residual_seq", None)
+    positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+    aux = jnp.zeros((), jnp.float32)
+
+    # unscanned prefix layers (e.g. kimi first dense layer)
+    new_prefix_cache = {}
+    if cfg.first_k_dense:
+        for i in range(cfg.first_k_dense):
+            lp = params["prefix"][f"p{i}"]
+            lc = None
+            if cache is not None:
+                lc = dict(cache["prefix"][f"p{i}"], len=cache["len"])
+            x, nc, a = _one_layer(lp, x, positions, cfg, "global", lc)
+            aux += a
+            if cache is not None:
+                new_prefix_cache[f"p{i}"] = {"k": nc["k"], "v": nc["v"]}
+
+    # scanned units
+    U = num_units(cfg)
+    L = len(cfg.layer_pattern)
+    xkv_fn = None
+    if cfg.family == "encdec":
+        if enc_out is not None:
+            def xkv_fn(lp, i, ucache):  # compute cross K/V from encoder output
+                KV, hd = cfg.num_kv_heads, cfg.hd
+                k = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, KV, hd)
+                v = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, KV, hd)
+                return (k, v, src_positions)
+        else:
+            def xkv_fn(lp, i, ucache):  # decode: cached cross K/V
+                xc = ucache["xkv"][f"l{i}"]
+                kpos = jnp.broadcast_to(
+                    jnp.arange(xc["k"].shape[1], dtype=jnp.int32)[None], (B, xc["k"].shape[1])
+                )
+                return (xc["k"], xc["v"], kpos)
+
+    unit = _unit_fn(cfg, positions, xkv_fn)
+    unit = _maybe_remat(unit, cfg)
+
+    if cache is None:
+        xs_cache = None
+        (x, aux), _ = lax.scan(
+            lambda c, up: (unit(c, (up, None))[0], None), (x, aux), params["blocks"]
+        )
+        new_cache = None
+    else:
+        ucaches = {
+            f"l{i}": {"k": cache[f"l{i}"]["k"], "v": cache[f"l{i}"]["v"]}
+            for i in range(L)
+        }
+        if cfg.family == "encdec":
+            ucaches["xkv"] = cache["xkv"]
+        ucaches["len"] = jnp.broadcast_to(cache["len"], (U,))
+        (x, aux), scanned_cache = lax.scan(unit, (x, aux), (params["blocks"], ucaches))
+        new_cache = dict(scanned_cache)
+        if cfg.family == "encdec":
+            new_cache["xkv"] = cache["xkv"]
+        if cfg.first_k_dense:
+            new_cache["prefix"] = new_prefix_cache
+        new_cache["len"] = cache["len"] + S
+
+    x = apply_norm(params["ln_f"], x, cfg)
+    x = shard(x, "batch", "residual_seq", None)
+    logits = x @ params["embed"].T.astype(cfg.adtype)  # tied head
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return shard(logits, "batch", "residual_seq", "vocab"), new_cache, aux
+
+
+def encoder_forward(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Bidirectional encoder over stub frame embeddings (B, Ssrc, fdim)."""
+    enc = params["encoder"]
+    x = (frames.astype(cfg.adtype) @ enc["frontend_proj"]).astype(cfg.adtype)
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def unit(carry, up):
+        x, aux = carry
+        lp = up["l0"]
+        h, _ = attention_block(
+            lp["attn"], apply_norm(lp["ln_attn"], x, cfg), positions, cfg,
+            layer_type="global", causal=False,
+        )
+        x = x + h
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["ln_mlp"], x, cfg), cfg)
+        return (x, aux), None
+
+    unit = _maybe_remat(unit, cfg)
+    (x, _), _ = lax.scan(unit, (x, jnp.zeros((), jnp.float32)), enc["blocks"])
+    return apply_norm(enc["ln_f"], x, cfg)
+
+
+def build_xattn_cache(params: Dict, enc_out: jnp.ndarray, cfg: ModelConfig) -> Dict:
+    """Precompute cross-attention K/V for decode (one pass over units)."""
+    B = enc_out.shape[0]
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    out = {}
+    for i in range(len(cfg.layer_pattern)):
+        wk = params["blocks"][f"l{i}"]["xattn"]["wk"]  # (U, d, KV*hd)
+        wv = params["blocks"][f"l{i}"]["xattn"]["wv"]
+        k = jnp.einsum("bsd,udk->ubsk", enc_out, wk).reshape(
+            wk.shape[0], B, -1, KV, hd
+        )
+        v = jnp.einsum("bsd,udk->ubsk", enc_out, wv).reshape(
+            wv.shape[0], B, -1, KV, hd
+        )
+        out[f"l{i}"] = {"k": k, "v": v}
+    return out

@@ -1,0 +1,6 @@
+"""Optimizers + gradient compression."""
+from .optimizers import (
+    OptConfig, opt_init, opt_update, opt_state_specs, schedule, global_norm, clip_by_global_norm,
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+)
+from .compression import compress_tree, init_ef, quantize_ef, dequantize, compressed_psum

@@ -1,0 +1,244 @@
+"""Optimizers: AdamW, Adafactor (factored second moments, for trillion-param
+configs) and int8-quantized Adam states (8-bit-optimizer-style, halves state
+HBM) — all pure pytree transforms, no external deps.
+
+State memory per parameter (bytes):
+    adamw fp32:   8      adamw bf16: 4      adamw int8: 2 (+ per-row scales)
+    adafactor:    ~0     (row+col factors for 2D+, full v for 1D)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(np.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_scale(grads, max_norm: float):
+    """Global-norm clip factor WITHOUT materializing an f32 copy of every
+    gradient (the copy costs +4 bytes/param peak on trillion-param runs)."""
+    n = global_norm(grads)
+    return jnp.minimum(1.0, max_norm / (n + 1e-9)), n
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    scale, n = clip_scale(grads, max_norm)
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), n
+
+
+# -- int8 state codec ---------------------------------------------------------
+
+
+def _q8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (dim0) symmetric int8 quantization of an fp32 tensor."""
+    if x.ndim == 0:
+        x = x[None]
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return jnp.round(x / scale).astype(jnp.int8)[0], scale
+    red = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    return jnp.round(x / scale).astype(jnp.int8), scale
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+# -- AdamW ---------------------------------------------------------------------
+
+
+def adamw_init(cfg: OptConfig, params):
+    def one(p):
+        # NB: distinct buffers for m and v — sharing one zeros array breaks
+        # donation (same buffer donated twice in the jitted train step)
+        def z(dt):
+            return jnp.zeros(p.shape, dt)
+
+        if cfg.state_dtype == "bfloat16":
+            return {"m": z(jnp.bfloat16), "v": z(jnp.bfloat16)}
+        if cfg.state_dtype == "int8":
+            qm, sm = _q8(z(jnp.float32))
+            qv, sv = _q8(z(jnp.float32))
+            return {"m": qm, "ms": sm, "v": qv, "vs": sv}
+        return {"m": z(jnp.float32), "v": z(jnp.float32)}
+
+    return {"mu": jax.tree.map(one, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    cscale, gnorm = clip_scale(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def one(g, p, s):
+        if cfg.state_dtype == "int8":
+            m = _dq8(s["m"], s["ms"])
+            v = _dq8(s["v"], s["vs"])
+        else:
+            m = s["m"].astype(jnp.float32)
+            v = s["v"].astype(jnp.float32)
+        g = g.astype(jnp.float32) * cscale  # fused per-tensor clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        if cfg.state_dtype == "bfloat16":
+            ns = {"m": m.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+        elif cfg.state_dtype == "int8":
+            qm, sm = _q8(m)
+            qv, sv = _q8(v)
+            ns = {"m": qm, "ms": sm, "v": qv, "vs": sv}
+        else:
+            ns = {"m": m, "v": v}
+        return new_p, ns
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["mu"])
+    out = [one(g, p, s) for g, p, s in zip(flat_g, flat_p, flat_s)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, {"lr": lr, "gnorm": gnorm}
+
+
+# -- Adafactor -------------------------------------------------------------------
+
+
+def adafactor_init(cfg: OptConfig, params):
+    def one(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"mu": jax.tree.map(one, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    cscale, gnorm = clip_scale(grads, cfg.grad_clip)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def one(g, p, s):
+        g = g.astype(jnp.float32) * cscale  # fused per-tensor clip
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            prec = (
+                vr[..., None] * vc[..., None, :] / jnp.maximum(denom[..., None], 1e-30)
+            )
+            upd = g / jnp.sqrt(prec + 1e-30)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            upd = g / jnp.sqrt(v + 1e-30)
+            ns = {"v": v}
+        # update clipping by RMS (Adafactor d=1.0)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, ns
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["mu"])
+    out = [one(g, p, s) for g, p, s in zip(flat_g, flat_p, flat_s)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, {"lr": lr, "gnorm": gnorm}
+
+
+# -- dry-run state declaration (ParamSpec mirror of opt_init) -------------------
+
+
+def opt_state_specs(cfg: OptConfig, param_specs):
+    """ParamSpec tree for the optimizer state (no allocation — dry-run)."""
+    sdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}.get(
+        cfg.state_dtype, jnp.float32
+    )
+
+    def one(ps: ParamSpec):
+        if cfg.name == "adafactor":
+            if len(ps.shape) >= 2:
+                return {
+                    "vr": ParamSpec(ps.shape[:-1], ps.logical[:-1], jnp.float32, "zeros"),
+                    "vc": ParamSpec(
+                        ps.shape[:-2] + ps.shape[-1:],
+                        ps.logical[:-2] + ps.logical[-1:],
+                        jnp.float32, "zeros",
+                    ),
+                }
+            return {"v": ParamSpec(ps.shape, ps.logical, jnp.float32, "zeros")}
+        return {
+            "m": ParamSpec(ps.shape, ps.logical, sdt, "zeros"),
+            "v": ParamSpec(ps.shape, ps.logical, sdt, "zeros"),
+        }
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        return one(tree)
+
+    return {"mu": walk(param_specs), "step": ParamSpec((), (), jnp.int32, "zeros")}
+
+
+# -- facade ------------------------------------------------------------------------
+
+
+def opt_init(cfg: OptConfig, params):
+    return adafactor_init(cfg, params) if cfg.name == "adafactor" else adamw_init(cfg, params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, grads, state, params)
+    return adamw_update(cfg, grads, state, params)

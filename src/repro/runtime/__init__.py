@@ -1,0 +1,5 @@
+"""Distributed runtime: sharding rules, mesh helpers, fault tolerance."""
+from .sharding import (
+    ParamSpec, axis_rules, shard, spec_for, materialize,
+    shape_structs, sharding_tree, param_count, param_bytes, DEFAULT_RULES,
+)

@@ -1,0 +1,41 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+The checkpoint format is mesh-agnostic (host-gathered full arrays + the data
+step for deterministic replay), so growing 256 -> 512 chips, shrinking after
+node failure, or changing the (data, model) split is just a restore with new
+shardings.  For true multi-host restarts the same logic runs per-host with
+process-local slices; here (single process, fake devices) we validate the
+semantics end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.sharding import sharding_tree
+
+
+def elastic_restore(
+    ckpt: Checkpointer,
+    param_specs: Dict,
+    mesh: Mesh,
+    rules: Optional[Dict] = None,
+    step: Optional[int] = None,
+) -> Dict:
+    """Load params and place them on ``mesh`` regardless of the mesh that
+    wrote the checkpoint."""
+    shardings = sharding_tree(param_specs, mesh, rules)
+    tree = ckpt.restore(step=step, shardings={"params": shardings})
+    return tree
+
+
+def replan_batch(global_batch: int, live_data_shards: int) -> int:
+    """After losing nodes, keep the global batch by growing per-shard batch
+    (preferred: preserves optimization trajectory) — returns new local batch."""
+    assert global_batch % live_data_shards == 0 or live_data_shards > 0
+    per = -(-global_batch // live_data_shards)
+    return per

@@ -1,0 +1,219 @@
+"""Logical-axis sharding runtime (MaxText-style) for the LM plane.
+
+Model code annotates arrays with *logical* axis names; a rules table maps
+them to physical mesh axes.  ``spec_for`` silently drops a mesh axis when
+the dimension is not divisible by it (replication fallback) so every config
+in the zoo lowers on the fixed production meshes — per-cell tuning then
+tightens the rules for the hillclimbed cells.
+
+Params are declared as ``ParamSpec`` trees (shape, logical axes, init), so
+the same declaration yields:
+  * real arrays for CPU smoke tests        (``materialize``)
+  * ShapeDtypeStructs + NamedShardings for the multi-pod dry-run
+    (``shape_structs`` — no allocation, jit in_shardings).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# rules + context
+# ---------------------------------------------------------------------------
+
+# default logical->physical rules; None = replicated
+DEFAULT_RULES: Dict[str, Union[None, str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,                # set to "model" for context-parallel shapes
+    "q_seq": None,              # attention-internal query-seq layout
+    "residual_seq": None,       # residual-stream seq layout (Megatron-SP)
+    "kv_seq": None,             # attention-internal key/value-seq layout
+    "cache_seq": None,          # decode KV-cache sequence axis
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",             # flattened head*dim projections
+    "ffn": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "vocab": "model",
+    "fsdp": "data",             # weight "row" dim when FSDP is on
+    "frontend": None,
+    "conv": None,
+    "state": None,              # SSM state dim
+    "ssm_heads": "model",
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Any] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None):
+    """Activate sharding annotations inside the block (no-op mesh=None)."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.rules = merged
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axes_of(name: Optional[str], rules) -> Tuple[str, ...]:
+    if name is None:
+        return ()
+    rule = rules.get(name, None)
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, Any]] = None,
+) -> P:
+    """PartitionSpec for ``shape`` under logical names, with divisibility
+    fallback (drop trailing mesh axes until the dim divides)."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    rules = rules if rules is not None else _CTX.rules
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = [a for a in _axes_of(name, rules) if a in mesh.shape and a not in used]
+        # shrink until divisible
+        while axes:
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % total == 0:
+                break
+            axes = axes[:-1]
+        if axes:
+            used.update(axes)
+            out.append(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Sharding constraint by logical names; identity outside axis_rules."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# param declaration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _leaf_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def _map_leaves(fn: Callable[[Tuple[str, ...], ParamSpec], Any], tree, prefix=()):
+    if isinstance(tree, dict):
+        return {k: _map_leaves(fn, v, prefix + (k,)) for k, v in tree.items()}
+    return fn(prefix, tree)
+
+
+def _path_key(key: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    h = int.from_bytes(hashlib.md5("/".join(path).encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def materialize(spec_tree, key: jax.Array):
+    """Instantiate real arrays (smoke tests / the example trainer)."""
+
+    def init_one(path, ps: ParamSpec):
+        k = _path_key(key, path)
+        if ps.init == "zeros":
+            return jnp.zeros(ps.shape, ps.dtype)
+        if ps.init == "ones":
+            return jnp.ones(ps.shape, ps.dtype)
+        fan_in = ps.shape[0] if len(ps.shape) >= 1 else 1
+        std = ps.scale / np.sqrt(max(fan_in, 1))
+        if ps.init == "embed":
+            std = ps.scale
+        return (jax.random.normal(k, ps.shape, jnp.float32) * std).astype(ps.dtype)
+
+    return _map_leaves(init_one, spec_tree)
+
+
+def shape_structs(spec_tree, mesh: Optional[Mesh], rules=None):
+    """ShapeDtypeStructs with shardings — dry-run stand-ins, no allocation."""
+
+    def one(path, ps: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(ps.shape, ps.dtype)
+        spec = spec_for(ps.shape, ps.logical, mesh, rules or dict(DEFAULT_RULES))
+        return jax.ShapeDtypeStruct(ps.shape, ps.dtype, sharding=NamedSharding(mesh, spec))
+
+    return _map_leaves(one, spec_tree)
+
+
+def sharding_tree(spec_tree, mesh: Mesh, rules=None):
+    """NamedSharding pytree (jit in_shardings for params)."""
+
+    def one(path, ps: ParamSpec):
+        spec = spec_for(ps.shape, ps.logical, mesh, rules or dict(DEFAULT_RULES))
+        return NamedSharding(mesh, spec)
+
+    return _map_leaves(one, spec_tree)
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(ps.shape)) for _, ps in _leaf_paths(spec_tree))
+
+
+def param_bytes(spec_tree) -> int:
+    return sum(
+        int(np.prod(ps.shape)) * jnp.dtype(ps.dtype).itemsize
+        for _, ps in _leaf_paths(spec_tree)
+    )

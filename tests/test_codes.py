@@ -1,0 +1,314 @@
+"""Tests for EP / Polynomial / MatDot codes, Batch-EP_RMFE, EP_RMFE-I/II,
+plain-embedding baseline and CSA — including any-R straggler recovery."""
+import itertools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BatchEPRMFE,
+    CSACode,
+    EPCode,
+    EPRMFE_I,
+    EPRMFE_II,
+    PlainCDMM,
+    gr_solve,
+    make_ring,
+    select_workers,
+    simulate_stragglers,
+)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(7)
+
+
+def ref_matmul(ring, A, B):
+    """Independent dense reference over the ring."""
+    return ring.matmul(A, B)
+
+
+# ---------------------------------------------------------------- EP codes
+
+
+EP_CASES = [
+    # (ring args, N, u, v, w, t, r, s)
+    ((2, 8, (4,)), 10, 2, 2, 2, 4, 4, 4),   # general EP, R=9
+    ((2, 32, (3,)), 8, 2, 2, 1, 4, 4, 4),    # polynomial-style w=1, R=4
+    ((2, 32, (3,)), 8, 1, 1, 4, 4, 8, 4),    # MatDot u=v=1, R=7
+    ((3, 2, (3,)), 9, 2, 2, 2, 4, 4, 4),     # odd p
+]
+
+
+@pytest.mark.parametrize("ringargs,N,u,v,w,t,r,s", EP_CASES)
+def test_ep_code_exact(ringargs, N, u, v, w, t, r, s, rng):
+    ring = make_ring(*ringargs)
+    code = EPCode(ring, N, u, v, w)
+    A = ring.random(rng, (t, r))
+    B = ring.random(rng, (r, s))
+    C = code.run(A, B)
+    expect = ref_matmul(ring, A, B)
+    assert np.array_equal(np.asarray(C), np.asarray(expect))
+
+
+def test_ep_any_R_subset(rng):
+    """EVERY R-subset of workers must decode correctly (the defining property)."""
+    ring = make_ring(2, 8, (3,))
+    code = EPCode(ring, N=7, u=2, v=2, w=1)  # R = 4
+    A = ring.random(rng, (4, 4))
+    B = ring.random(rng, (4, 4))
+    expect = np.asarray(ref_matmul(ring, A, B))
+    FA, GB = code.encode_a(A), code.encode_b(B)
+    H = code.worker_compute(FA, GB)
+
+    @jax.jit
+    def dec(idx):
+        return code.decode(jnp.take(H, idx, axis=0), idx)
+
+    for subset in itertools.combinations(range(7), 4):
+        C = dec(jnp.asarray(subset, dtype=jnp.int32))
+        assert np.array_equal(np.asarray(C), expect), subset
+
+
+def test_ep_decode_jit_with_dynamic_idx(rng):
+    ring = make_ring(2, 32, (3,))
+    code = EPCode(ring, N=8, u=2, v=2, w=1)
+    A = ring.random(rng, (2, 2))
+    B = ring.random(rng, (2, 2))
+    FA, GB = code.encode_a(A), code.encode_b(B)
+    H = code.worker_compute(FA, GB)
+
+    @jax.jit
+    def dec(H, idx):
+        return code.decode(jnp.take(H, idx, axis=0), idx)
+
+    expect = np.asarray(ref_matmul(ring, A, B))
+    for subset in [(0, 1, 2, 3), (4, 5, 6, 7), (1, 3, 5, 7)]:
+        idx = jnp.asarray(subset, dtype=jnp.int32)
+        assert np.array_equal(np.asarray(dec(H, idx)), expect)
+
+
+def test_ep_threshold_validation():
+    ring = make_ring(2, 8, (3,))
+    with pytest.raises(ValueError):
+        EPCode(ring, N=3, u=2, v=2, w=1)  # R=4 > N
+    with pytest.raises(ValueError):
+        EPCode(ring, N=20, u=2, v=2, w=1)  # N > |T| = 8
+
+
+# ------------------------------------------------------------ plain baseline
+
+
+def test_plain_cdmm_over_z2e(rng):
+    base = make_ring(2, 32, ())
+    plain = PlainCDMM(base, N=8, u=2, v=2, w=1)
+    assert plain.ext.D >= 3
+    A = base.random(rng, (4, 4))
+    B = base.random(rng, (4, 4))
+    C = plain.run(A, B)
+    expect = ref_matmul(base, A, B)
+    assert np.array_equal(np.asarray(C), np.asarray(expect))
+
+
+# ------------------------------------------------------------ Batch-EP_RMFE
+
+
+BATCH_CASES = [
+    # (ring args, n, N, u, v, w)
+    ((2, 32, ()), 2, 8, 2, 2, 1),    # the paper's 8-worker experiment shape
+    ((2, 32, ()), 2, 16, 2, 2, 2),   # paper's 16-worker shape, R=9
+    ((2, 16, (2,)), 3, 16, 1, 1, 3), # MatDot inside, n=3
+    ((3, 2, (2,)), 4, 9, 2, 2, 1),   # odd p
+]
+
+
+@pytest.mark.parametrize("ringargs,n,N,u,v,w", BATCH_CASES)
+def test_batch_rmfe(ringargs, n, N, u, v, w, rng):
+    base = make_ring(*ringargs)
+    sch = BatchEPRMFE(base, n=n, N=N, u=u, v=v, w=w)
+    assert sch.R == u * v * w + w - 1  # paper Thm III.2
+    t, r, s = 2 * u, 2 * w * max(1, w), 2 * v
+    As = base.random(rng, (sch.rmfe.n, t, r))
+    Bs = base.random(rng, (sch.rmfe.n, r, s))
+    Cs = sch.run(As, Bs)
+    for i in range(sch.rmfe.n):
+        expect = ref_matmul(base, As[i], Bs[i])
+        assert np.array_equal(np.asarray(Cs[i]), np.asarray(expect)), i
+
+
+def test_batch_rmfe_straggler_subsets(rng):
+    base = make_ring(2, 32, ())
+    sch = BatchEPRMFE(base, n=2, N=8, u=2, v=2, w=1)  # R = 4
+    As = base.random(rng, (2, 4, 4))
+    Bs = base.random(rng, (2, 4, 4))
+    FA, GB = sch.encode(As, Bs)
+    H = sch.worker_compute(FA, GB)
+    expects = [np.asarray(ref_matmul(base, As[i], Bs[i])) for i in range(2)]
+
+    @jax.jit
+    def dec(idx):
+        return sch.decode(jnp.take(H, idx, axis=0), idx)
+
+    subsets = list(itertools.combinations(range(8), 4))
+    for subset in subsets[::7] + [subsets[-1]]:  # sampled + extremes
+        Cs = dec(jnp.asarray(subset, dtype=jnp.int32))
+        for i in range(2):
+            assert np.array_equal(np.asarray(Cs[i]), expects[i]), subset
+
+
+def test_batch_rmfe_threshold_beats_gcsa():
+    """Table 1: R_RMFE = uvw + w - 1 vs R_GCSA = uvw(n + kappa - 1) + w - 1."""
+    from repro.core import gcsa_cost_model
+
+    base = make_ring(2, 32, ())
+    for n in [2, 4, 8]:
+        sch = BatchEPRMFE(base, n=n, N=64, u=2, v=2, w=2)
+        g = gcsa_cost_model(8, 8, 8, 2, 2, 2, n, n, 64, m_eff=6)
+        assert sch.R < g.R
+        assert g.R >= n * sch.R * 0.5  # factor ~ 1/(2n) at kappa=n
+
+
+# ------------------------------------------------------------- EP_RMFE-I/II
+
+
+def test_eprmfe1(rng):
+    base = make_ring(2, 32, ())
+    sch = EPRMFE_I(base, n=2, N=8, u=2, v=2, w=1)
+    assert sch.R == 4
+    A = base.random(rng, (4, 8))
+    B = base.random(rng, (8, 4))
+    C = sch.run(A, B)
+    assert np.array_equal(np.asarray(C), np.asarray(ref_matmul(base, A, B)))
+
+
+def test_eprmfe1_matdot_inside(rng):
+    base = make_ring(2, 16, ())
+    sch = EPRMFE_I(base, n=2, N=16, u=1, v=1, w=4)  # R = 7
+    A = base.random(rng, (4, 16))
+    B = base.random(rng, (16, 4))
+    C = sch.run(A, B)
+    assert np.array_equal(np.asarray(C), np.asarray(ref_matmul(base, A, B)))
+
+
+def test_eprmfe2(rng):
+    base = make_ring(2, 32, ())
+    sch = EPRMFE_II(base, n=2, N=8, u=2, v=2, w=1)
+    assert sch.R == 4
+    A = base.random(rng, (8, 4))
+    B = base.random(rng, (4, 8))
+    C = sch.run(A, B)
+    assert np.array_equal(np.asarray(C), np.asarray(ref_matmul(base, A, B)))
+
+
+def test_eprmfe2_straggler(rng):
+    base = make_ring(2, 32, ())
+    sch = EPRMFE_II(base, n=2, N=8, u=2, v=2, w=1)
+    A = base.random(rng, (4, 4))
+    B = base.random(rng, (4, 4))
+    idx = jnp.asarray([2, 4, 6, 7], dtype=jnp.int32)
+    C = sch.run(A, B, idx)
+    assert np.array_equal(np.asarray(C), np.asarray(ref_matmul(base, A, B)))
+
+
+# --------------------------------------------------------------------- CSA
+
+
+def test_gr_solve(rng):
+    ring = make_ring(2, 16, (3,))
+    n = 5
+    # random invertible matrix: triangular with unit diagonal times another
+    M = np.asarray(ring.random(rng, (n, n))).astype(np.uint32)
+    for i in range(n):
+        M[i, i, 0] |= 1  # make diagonal odd => unit
+        for j in range(i + 1, n):
+            M[i, j] = 0
+    Mj = jnp.asarray(M)
+    X = ring.random(rng, (n, 3))
+    Y = ring.matmul(Mj, X)
+    sol = gr_solve(ring, Mj, Y)
+    assert np.array_equal(np.asarray(sol), np.asarray(X))
+
+
+def test_csa_batch(rng):
+    ring = make_ring(2, 16, (4,))  # |T| = 16 >= L + N = 3 + 8
+    code = CSACode(ring, L=3, N=8)
+    assert code.R == 5
+    As = ring.random(rng, (3, 4, 4))
+    Bs = ring.random(rng, (3, 4, 4))
+    Cs = code.run(As, Bs)
+    for i in range(3):
+        assert np.array_equal(
+            np.asarray(Cs[i]), np.asarray(ref_matmul(ring, As[i], Bs[i]))
+        ), i
+
+
+def test_csa_any_subset(rng):
+    ring = make_ring(2, 16, (4,))
+    code = CSACode(ring, L=2, N=6)  # R = 3
+    As = ring.random(rng, (2, 2, 2))
+    Bs = ring.random(rng, (2, 2, 2))
+    FA, GB = code.encode_a(As), code.encode_b(Bs)
+    H = code.worker_compute(FA, GB)
+    expects = [np.asarray(ref_matmul(ring, As[i], Bs[i])) for i in range(2)]
+
+    @jax.jit
+    def dec(idx):
+        return code.decode(jnp.take(H, idx, axis=0), idx)
+
+    for subset in itertools.combinations(range(6), 3):
+        Cs = dec(jnp.asarray(subset, dtype=jnp.int32))
+        for i in range(2):
+            assert np.array_equal(np.asarray(Cs[i]), expects[i]), subset
+
+
+# --------------------------------------------------------------- stragglers
+
+
+def test_select_workers():
+    mask = jnp.asarray([True, False, True, True, False, True])
+    idx = select_workers(mask, 4)
+    assert list(np.asarray(idx)) == [0, 2, 3, 5]
+
+
+def test_simulate_stragglers():
+    key = jax.random.PRNGKey(0)
+    mask, enough = simulate_stragglers(key, 16, fail_prob=0.3, min_live=9)
+    assert int(jnp.sum(mask)) >= 9
+
+
+def test_end_to_end_with_simulated_stragglers(rng):
+    base = make_ring(2, 32, ())
+    sch = BatchEPRMFE(base, n=2, N=8, u=2, v=2, w=1)
+    As = base.random(rng, (2, 4, 4))
+    Bs = base.random(rng, (2, 4, 4))
+
+    @jax.jit
+    def go(key, As, Bs):
+        mask, _ = simulate_stragglers(key, 8, fail_prob=0.4, min_live=sch.R)
+        idx = select_workers(mask, sch.R)
+        FA, GB = sch.encode(As, Bs)
+        H = sch.worker_compute(FA, GB)
+        return sch.decode(jnp.take(H, idx, axis=0), idx)
+
+    for seed in range(3):
+        Cs = go(jax.random.PRNGKey(seed), As, Bs)
+        for i in range(2):
+            assert np.array_equal(
+                np.asarray(Cs[i]), np.asarray(ref_matmul(base, As[i], Bs[i]))
+            )
+
+
+def test_eprmfe2_lite_paper_config(rng):
+    """The exact §V experimental config: n=2, A embedded, B phi1-packed."""
+    base = make_ring(2, 32, ())
+    for N, (u, v, w) in [(8, (2, 2, 1)), (16, (2, 2, 2))]:
+        sch = EPRMFE_II(base, n=2, N=N, u=u, v=v, w=w, split_a=False)
+        assert sch.top.D in (3, 4)  # GR(2^32, 3) / GR(2^32, 4), as in the paper
+        A = base.random(rng, (4, 8))
+        B = base.random(rng, (8, 4))
+        C = sch.run(A, B)
+        assert np.array_equal(np.asarray(C), np.asarray(ref_matmul(base, A, B)))

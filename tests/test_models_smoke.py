@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: reduced config, one train + decode step on CPU.
+
+Asserts output shapes and absence of NaNs (assignment requirement f).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, smoke_shape
+from repro.models import build_model
+from repro.runtime import materialize
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batch(api, shape, rng):
+    specs = api.batch_specs(shape)
+    out = {}
+    for k, ps in specs.items():
+        if ps.dtype == jnp.int32:
+            hi = api.cfg.vocab_size
+            out[k] = jnp.asarray(rng.integers(0, hi, ps.shape, dtype=np.int64), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(ps.shape), ps.dtype)
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(5)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch, rng):
+    cfg = ARCHS[arch].smoke()
+    api = build_model(cfg)
+    params = materialize(api.param_specs, jax.random.PRNGKey(0))
+    shape = smoke_shape("train")
+    batch = make_batch(api, shape, rng)
+
+    @jax.jit
+    def step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(
+            params, batch
+        )
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return loss, gnorm
+
+    loss, gnorm = step(params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert np.isfinite(float(gnorm)), (arch, float(gnorm))
+    # random init ~> loss near log(vocab)
+    assert 0.0 < float(loss) < 2 * np.log(cfg.vocab_size) + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch, rng):
+    cfg = ARCHS[arch].smoke()
+    api = build_model(cfg)
+    params = materialize(api.param_specs, jax.random.PRNGKey(0))
+    shape = smoke_shape("decode")
+    cache = materialize(api.cache_decl(shape), jax.random.PRNGKey(1))
+    cache = jax.tree.map(jnp.zeros_like, cache)
+    if isinstance(cache, dict) and "len" in cache:
+        cache["len"] = jnp.asarray(3, jnp.int32)  # pretend 3 tokens prefilled
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (shape.global_batch, 1)), jnp.int32)}
+
+    @jax.jit
+    def step(params, cache, batch):
+        return api.decode_fn(params, cache, batch)
+
+    logits, new_cache = step(params, cache, batch)
+    assert logits.shape == (shape.global_batch, 1, cfg.vocab_size), arch
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32))), arch
+    # cache must advance
+    if isinstance(new_cache, dict) and "len" in new_cache:
+        assert int(new_cache["len"]) == 4
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_prefill(arch, rng):
+    cfg = ARCHS[arch].smoke()
+    api = build_model(cfg)
+    params = materialize(api.param_specs, jax.random.PRNGKey(0))
+    shape = smoke_shape("prefill")
+    batch = make_batch(api, shape, rng)
+    logits = jax.jit(api.prefill_fn)(params, batch)
+    assert logits.shape[0] == shape.global_batch and logits.shape[1] == 1
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32))), arch

@@ -1,0 +1,100 @@
+"""Tests for RMFE: the defining property and linearity, basic + concatenated."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.galois import make_ring
+from repro.core.rmfe import BasicRMFE, ConcatRMFE, build_rmfe
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(1)
+
+
+CASES = [
+    # (ring args, n) for BasicRMFE
+    ((2, 32, (3,)), 4),     # GR(2^32, 3): |T| = 8 >= 4
+    ((2, 32, (3,)), 8),     # full exceptional set
+    ((2, 16, (2,)), 2),     # paper experiment regime: n=2 small m
+    ((3, 2, (2,)), 6),      # odd p
+    ((2, 32, ()), 2),       # Z_{2^32}, n=2 (paper's setting over Z_2^e)
+]
+
+
+@pytest.mark.parametrize("ringargs,n", CASES)
+def test_rmfe_property(ringargs, n, rng):
+    base = make_ring(*ringargs)
+    rmfe = BasicRMFE(base, n)
+    assert rmfe.m >= 2 * n - 1
+    x = base.random(rng, (5, n))
+    y = base.random(rng, (5, n))
+    gx, gy = rmfe.phi(x), rmfe.phi(y)
+    assert gx.shape == (5, rmfe.ext.D)
+    prod = rmfe.ext.mul(gx, gy)
+    back = rmfe.psi(prod)
+    expect = base.mul(x, y)
+    assert np.array_equal(np.asarray(back), np.asarray(expect))
+
+
+@pytest.mark.parametrize("ringargs,n", CASES[:2])
+def test_rmfe_linearity(ringargs, n, rng):
+    base = make_ring(*ringargs)
+    rmfe = BasicRMFE(base, n)
+    x = base.random(rng, (3, n))
+    y = base.random(rng, (3, n))
+    lhs = rmfe.phi(base.add(x, y))
+    rhs = rmfe.ext.add(rmfe.phi(x), rmfe.phi(y))
+    assert np.array_equal(np.asarray(lhs), np.asarray(rhs))
+    g = rmfe.ext.random(rng, (3,))
+    h = rmfe.ext.random(rng, (3,))
+    lhs = rmfe.psi(rmfe.ext.add(g, h))
+    rhs = base.add(rmfe.psi(g), rmfe.psi(h))
+    assert np.array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_rmfe_sum_of_products(rng):
+    """psi(sum_j phi(a_j) phi(b_j)) == sum_j a_j * b_j — the matmul identity."""
+    base = make_ring(2, 32, (3,))
+    rmfe = BasicRMFE(base, 4)
+    r = 6
+    a = base.random(rng, (r, 4))
+    b = base.random(rng, (r, 4))
+    acc = jnp.zeros((rmfe.ext.D,), dtype=base.dtype)
+    expect = jnp.zeros((4, base.D), dtype=base.dtype)
+    for j in range(r):
+        acc = rmfe.ext.add(acc, rmfe.ext.mul(rmfe.phi(a[j]), rmfe.phi(b[j])))
+        expect = base.add(expect, base.mul(a[j], b[j]))
+    assert np.array_equal(np.asarray(rmfe.psi(acc)), np.asarray(expect))
+
+
+def test_concat_rmfe_z2e(rng):
+    """Over Z_{2^32} the base |T|=2; concatenation gives n=4, 6, 8..."""
+    base = make_ring(2, 32, ())
+    rmfe = ConcatRMFE(base, n2=2, n1=4)
+    assert rmfe.n == 8
+    x = base.random(rng, (3, 8))
+    y = base.random(rng, (3, 8))
+    prod = rmfe.ext.mul(rmfe.phi(x), rmfe.phi(y))
+    back = rmfe.psi(prod)
+    assert np.array_equal(np.asarray(back), np.asarray(base.mul(x, y)))
+
+
+def test_build_rmfe_auto(rng):
+    base = make_ring(2, 32, ())
+    r = build_rmfe(base, 2)
+    assert isinstance(r, BasicRMFE)
+    r2 = build_rmfe(base, 6)
+    assert isinstance(r2, ConcatRMFE) and r2.n >= 6
+    base3 = make_ring(2, 32, (3,))
+    r3 = build_rmfe(base3, 8)
+    assert isinstance(r3, BasicRMFE)
+
+
+def test_rmfe_rate():
+    """m = Theta(n): check concrete rates match the construction (2n-1, +coprime bump)."""
+    base = make_ring(2, 32, (3,))
+    for n in [2, 3, 4, 8]:
+        rmfe = BasicRMFE(base, n)
+        assert rmfe.m <= 2 * n + 2  # 2n-1 plus at most a small coprimality bump

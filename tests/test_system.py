@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full paper pipeline in one test: machine-word matrices -> RMFE packing
+-> EP-coded distribution -> worker failures -> exact recovery -> unpacking,
+plus the serving integration (coded quantized matmul) and the cost-model
+claims (Thm III.2 / Table 1).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BatchEPRMFE,
+    EPRMFE_I,
+    PlainCDMM,
+    gcsa_cost_model,
+    make_ring,
+    select_workers,
+    simulate_stragglers,
+)
+from repro.cdmm import CodedQuantMatmul
+
+
+def test_paper_pipeline_end_to_end():
+    """Fig. 1 framework over Z_{2^32} with random failures, exact recovery."""
+    Z32 = make_ring(2, 32, ())
+    sch = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)  # paper's 8-worker regime
+    assert sch.ext.D == 3 and sch.R == 4  # GR(2^32,3), R=4 — §V setup
+    rng = np.random.default_rng(0)
+    As = Z32.random(rng, (2, 32, 32))
+    Bs = Z32.random(rng, (2, 32, 32))
+
+    @jax.jit
+    def serve(key, As, Bs):
+        mask, _ = simulate_stragglers(key, 8, fail_prob=0.45, min_live=sch.R)
+        idx = select_workers(mask, sch.R)
+        FA, GB = sch.encode(As, Bs)
+        H = sch.worker_compute(FA, GB)
+        return sch.decode(jnp.take(H, idx, axis=0), idx), mask
+
+    for seed in range(4):
+        Cs, mask = serve(jax.random.PRNGKey(seed), As, Bs)
+        assert int(jnp.sum(mask)) >= sch.R
+        for i in range(2):
+            np.testing.assert_array_equal(
+                np.asarray(Cs[i]), np.asarray(Z32.matmul(As[i], Bs[i]))
+            )
+
+
+def test_amortization_beats_plain_embedding():
+    """Thm III.2: Batch-EP_RMFE amortized costs ~1/m of plain CDMM."""
+    Z32 = make_ring(2, 32, ())
+    plain = PlainCDMM(Z32, N=8, u=2, v=2, w=1)
+    batch = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)
+    cp = plain.costs(256, 256, 256)
+    cb = batch.costs(256, 256, 256)
+    assert cb.upload < cp.upload  # amortized by n
+    assert cb.worker_ops < cp.worker_ops
+    assert cb.R == cp.R  # same recovery threshold
+
+
+def test_threshold_vs_gcsa_table1():
+    Z32 = make_ring(2, 32, ())
+    for n in (2, 4):
+        sch = BatchEPRMFE(Z32, n=n, N=64, u=2, v=2, w=2)
+        g = gcsa_cost_model(64, 64, 64, 2, 2, 2, n, n, 64, m_eff=6)
+        assert g.R / sch.R >= n  # >= n x smaller threshold at kappa = n
+
+
+def test_coded_serving_bit_exact_under_failures():
+    """The serving-plane integration: int8 matmul, 4/8 workers dead, zero drift."""
+    cm = CodedQuantMatmul(N=8, axis_name=None)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((16, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    ref = np.asarray(cm(jnp.asarray(x), jnp.asarray(w), mask=None))
+    mask = np.ones(8, bool)
+    mask[[1, 2, 5, 7]] = False
+    out = np.asarray(cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask)))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_single_dmm_type1_splits_work():
+    """EP_RMFE-I computes a single product via the batch framework."""
+    Z16 = make_ring(2, 16, ())
+    sch = EPRMFE_I(Z16, n=2, N=8, u=2, v=2, w=1)
+    rng = np.random.default_rng(2)
+    A = Z16.random(rng, (8, 16))
+    B = Z16.random(rng, (16, 8))
+    C = sch.run(A, B, idx=jnp.asarray([1, 3, 4, 6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(C), np.asarray(Z16.matmul(A, B)))

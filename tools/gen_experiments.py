@@ -1,0 +1,194 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts (baseline + optimized)."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASE = os.path.join(ROOT, "artifacts", "dryrun")
+OPT = os.path.join(ROOT, "artifacts", "dryrun_opt")
+
+
+def load(d, mesh):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def row(r, opt=None):
+    if r["status"] == "skipped":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | skipped¹ | — | — | — |"
+    t = r["roofline"]
+    mem = r.get("bytes_per_device", 0) / 2**30
+    frac_b = t["roofline_fraction"]
+    cells = (
+        f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.4g} | "
+        f"{t['t_memory_s']:.4g} | {t['t_collective_s']:.4g} | {t['dominant']} | "
+        f"{frac_b:.3f} | {t.get('useful_ratio', 0):.2f} | {mem:.1f} |"
+    )
+    return cells
+
+
+def table(recs, title):
+    lines = [
+        f"#### {title}",
+        "",
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "frac² | 6ND/HLO³ | GiB/dev⁴ |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(recs):
+        lines.append(row(recs[k]))
+    lines.append("")
+    return "\n".join(lines)
+
+
+def compare_table(base, opt):
+    lines = [
+        "| arch | shape | coll (s) base → opt | frac base → opt | GiB/dev base → opt |",
+        "|---|---|---|---|---|",
+    ]
+    for k in sorted(base):
+        b, o = base[k], opt.get(k)
+        if b["status"] != "ok" or not o or o["status"] != "ok":
+            continue
+        tb, to = b["roofline"], o["roofline"]
+        mb = b.get("bytes_per_device", 0) / 2**30
+        mo = o.get("bytes_per_device", 0) / 2**30
+        imp = tb["t_collective_s"] / max(to["t_collective_s"], 1e-9)
+        star = " **(×%.0f)**" % imp if imp >= 10 else ""
+        lines.append(
+            f"| {k[0]} | {k[1]} | {tb['t_collective_s']:.4g} → "
+            f"{to['t_collective_s']:.4g}{star} | {tb['roofline_fraction']:.3f} → "
+            f"{to['roofline_fraction']:.3f} | {mb:.1f} → {mo:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_summary(d):
+    n_ok = n_skip = n_err = 0
+    comp = []
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        if r["status"] == "ok":
+            n_ok += 1
+            comp.append(r.get("compile_s", 0))
+        elif r["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    return n_ok, n_skip, n_err, (sum(comp) / max(len(comp), 1))
+
+
+PERF_NARRATIVE = open(os.path.join(ROOT, "tools", "perf_narrative.md")).read()
+
+
+def main():
+    base_s = load(BASE, "single")
+    base_m = load(BASE, "multi")
+    opt_s = load(OPT, "single")
+    opt_m = load(OPT, "multi")
+    ok_b, sk_b, er_b, _ = dryrun_summary(BASE)
+    ok_o, sk_o, er_o, avg_c = dryrun_summary(OPT)
+
+    doc = f"""# EXPERIMENTS
+
+All numbers below are REPRODUCIBLE from this repo:
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun            # artifacts/dryrun_opt (current rules)
+PYTHONPATH=src python -m repro.launch.roofline          # tables
+PYTHONPATH=src python -m benchmarks.run                 # CDMM measured benches
+PYTHONPATH=src pytest tests/                            # correctness
+```
+
+Baseline artifacts (pre-optimization rules) are frozen in `artifacts/dryrun/`;
+the optimized run lives in `artifacts/dryrun_opt/` (env `REPRO_DRYRUN_DIR`).
+
+---
+
+## §Dry-run
+
+Every (architecture × shape × mesh) cell was `jit(step).lower().compile()`d
+for BOTH production meshes — single pod (16, 16) = 256 chips, axes
+(data, model), and multi-pod (2, 16, 16) = 512 chips, axes (pod, data,
+model) — with 512 forced host devices and NO array allocation
+(ShapeDtypeStructs + NamedShardings end-to-end).
+
+* baseline sweep: **{ok_b} compiled OK, {sk_b} documented skips, {er_b} failures**
+* optimized sweep: **{ok_o} compiled OK, {sk_o} documented skips, {er_o} failures**
+  (mean compile {avg_c:.0f}s/cell on the CPU container)
+
+Step kinds per shape: `train_4k` lowers the full production `train_step`
+(loss + bwd + optimizer update, donated params/opt state); `prefill_32k`
+lowers the forward; `decode_32k`/`long_500k` lower `serve_step` (one token
+against a seq_len KV/state cache, cache donated).
+
+¹ `long_500k` is skipped for pure quadratic-attention archs and runs for
+the SSM/hybrid archs (mamba2-370m, zamba2-7b) per the assignment note
+(DESIGN.md §4).
+
+Memory-fit notes (from `compiled.memory_analysis()`): bytes/device in the
+tables below include a ~2× inflation from the CPU backend's bf16→f32
+emulation of matmuls/collectives (conversions are materialised); TPU-real
+estimates are roughly half the reported GiB. kimi-k2 train is the only cell
+whose parameters+grads (4.1 TB bf16) genuinely exceed a single pod
+(256×16 GB = 4 TB) — it trains on the multi-pod mesh with ZeRO-3 over
+(pod, data), which is exactly why the config sets `fsdp_axes=("pod","data")`.
+
+## §Roofline
+
+Terms (per chip, per step): `t_comp = FLOPs/(197e12)`, `t_mem =
+HBM_bytes/(819e9)`, `t_coll = collective_bytes/(50e9)`.
+
+* FLOPs/HBM bytes come from the analytic per-arch cost model
+  (`launch/costmodel.py`) because XLA's `cost_analysis()` counts a `while`
+  body ONCE, not ×trip-count — verified on gemma2-2b: raw 2.05e13 vs
+  corrected 8.8e13 flops/chip, ratio = the 13-unit layer scan.  Raw XLA
+  numbers are kept in every artifact under `hlo_flops_per_chip_raw`.
+* Collective bytes are parsed from the compiled per-device HLO **with
+  while-trip multipliers** (`launch/hlo_analysis.py`, validated by
+  `tests/test_hlo_analysis.py`: a psum in a 10-trip loop is charged 10×).
+* `frac` = t_comp / max(all three) — the roofline fraction when the
+  dominant term is compute; for decode cells the meaningful statement is
+  `dominant == memory` (decode is weight/cache-read bound by construction,
+  t_comp ≈ 0 at batch ≤ 128×1 token).
+* 6ND/HLO = MODEL_FLOPS / analytic total FLOPs: 6·N_active·D for train,
+  2·N_active·D forward — catches remat & capacity-factor waste (MoE cells
+  show ~0.5 because top-8/384 routing pays capacity 1.25 and remat ~4/3).
+
+### Baseline (single pod, 256 chips) — initial GSPMD rules
+
+{table(base_s, "baseline / single-pod")}
+
+### Optimized (single pod, 256 chips) — after §Perf iterations
+
+{table(opt_s, "optimized / single-pod")}
+
+### Optimized (multi-pod, 512 chips)
+
+{table(opt_m, "optimized / multi-pod")}
+
+### Baseline → optimized per cell
+
+{compare_table(base_s, opt_s)}
+
+**Reading the optimized table:** train/prefill cells are compute- or
+collective-bound with fractions 0.1–0.5 (the residual collective cost is
+ZeRO weight gathers + SP↔TP transitions — see Perf log for what each is);
+every decode cell is **memory-dominant**, i.e. serving latency sits at the
+HBM weight/cache-read bound, which is the correct roofline regime for
+batch-decode.
+
+---
+
+{PERF_NARRATIVE}
+"""
+    open(os.path.join(ROOT, "EXPERIMENTS.md"), "w").write(doc)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()
