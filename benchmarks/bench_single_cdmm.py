@@ -8,9 +8,9 @@ paper's two regimes:
 n = 2 for both optimized variants, exactly as in §V (type II uses the
 paper's measured configuration: B packed via phi1, A embedded).
 
-Paper's claims to validate (§V-B/C):
-  I : encode ~ 1/2 EP, upload  1/2, worker 1/2, decode/download ~ EP.
-  II: decode ~ 1/2 EP, download 1/2, worker 1/2, upload between EP and I.
+All three schemes run through the unified CdmmScheme surface
+(encode_a/encode_b/worker_compute/decode + costs(spec)) — the volumes come
+straight from the shared analytic cost model.
 """
 from __future__ import annotations
 
@@ -18,88 +18,53 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EPRMFE_I, EPRMFE_II, PlainCDMM, make_ring
+from repro.cdmm.api import (
+    EPRMFE1Adapter,
+    EPRMFE2Adapter,
+    PlainCDMMAdapter,
+    ProblemSpec,
+)
+from repro.core import make_ring
 
 from .common import emit, timeit
 
 WORD = 4  # bytes per Z_{2^32} element
 
 
-def _volumes(N, R, tb, rb, sb, m, out_tb, out_sb):
-    up = N * (tb * rb + rb * sb) * m * WORD
-    down = R * out_tb * out_sb * m * WORD
-    return up, down
-
-
 def bench_one(N: int, uvw, sizes, iters: int = 3):
     u, v, w = uvw
     base = make_ring(2, 32, ())
-    plain = PlainCDMM(base, N=N, u=u, v=v, w=w)
-    t1 = EPRMFE_I(base, n=2, N=N, u=u, v=v, w=w)
-    t2 = EPRMFE_II(base, n=2, N=N, u=u, v=v, w=w, split_a=False)
-    m = plain.ext.D
+    schemes = {
+        "ep_plain": PlainCDMMAdapter(base, N, u, v, w),
+        "ep_rmfe1": EPRMFE1Adapter(base, 2, N, u, v, w),
+        "ep_rmfe2": EPRMFE2Adapter(base, 2, N, u, v, w),  # §V: split_a=False
+    }
     rng = np.random.default_rng(0)
 
     for size in sizes:
         t = r = s = size
         A = base.random(rng, (t, r))
         B = base.random(rng, (r, s))
-        idx = jnp.arange(plain.R, dtype=jnp.int32)
-
-        # ---- plain EP (Lemma III.1 baseline) ----
-        eA = plain.ext.embed_base(A, base)
-        eB = plain.ext.embed_base(B, base)
-        enc = jax.jit(lambda a, b: (plain.code.encode_a(a), plain.code.encode_b(b)))
-        FA, GB = enc(eA, eB)
-        worker = jax.jit(lambda fa, gb: plain.ext.matmul(fa, gb))
-        H = plain.code.worker_compute(FA, GB)
-        dec = jax.jit(lambda h: plain.code.decode(h, idx))
-        e_us = timeit(enc, eA, eB, iters=iters)
-        w_us = timeit(worker, FA[0], GB[0], iters=iters)
-        d_us = timeit(dec, H[: plain.R], iters=iters)
-        up, down = _volumes(N, plain.R, t // u, r // w, s // v, m, t // u, s // v)
-        emit(f"ep_plain_N{N}_s{size}_encode", e_us, upload_B=up, m=m)
-        emit(f"ep_plain_N{N}_s{size}_worker", w_us, m=m)
-        emit(f"ep_plain_N{N}_s{size}_decode", d_us, download_B=down)
-
-        # ---- EP_RMFE-I ----
-        enc1 = jax.jit(lambda a, b: t1.batch.encode(*t1.split(a, b)))
-        FA1, GB1 = enc1(A, B)
-        worker1 = jax.jit(lambda fa, gb: t1.ext.matmul(fa, gb))
-        H1 = t1.batch.worker_compute(FA1, GB1)
-
-        def dec1(h):
-            Cs = t1.batch.decode(h, idx)
-            acc = Cs[0]
-            for i in range(1, t1.n):
-                acc = base.add(acc, Cs[i])
-            return acc
-
-        dec1 = jax.jit(dec1)
-        e_us = timeit(enc1, A, B, iters=iters)
-        w_us = timeit(worker1, FA1[0], GB1[0], iters=iters)
-        d_us = timeit(dec1, H1[: t1.R], iters=iters)
-        up1, down1 = _volumes(N, t1.R, t // u, (r // 2) // w, s // v, m, t // u, s // v)
-        emit(f"ep_rmfe1_N{N}_s{size}_encode", e_us, upload_B=up1, m=m)
-        emit(f"ep_rmfe1_N{N}_s{size}_worker", w_us, m=m)
-        emit(f"ep_rmfe1_N{N}_s{size}_decode", d_us, download_B=down1)
-
-        # ---- EP_RMFE-II (paper §V configuration) ----
-        enc2 = jax.jit(lambda a, b: (t2.code.encode_a(t2.pack_a(a)),
-                                     t2.code.encode_b(t2.pack_b(b))))
-        FA2, GB2 = enc2(A, B)
-        worker2 = jax.jit(lambda fa, gb: t2.top.matmul(fa, gb))
-        H2 = t2.code.worker_compute(FA2, GB2)
-        dec2 = jax.jit(lambda h: t2.unpack(t2.code.decode(h, idx)))
-        e_us = timeit(enc2, A, B, iters=iters)
-        w_us = timeit(worker2, FA2[0], GB2[0], iters=iters)
-        d_us = timeit(dec2, H2[: t2.R], iters=iters)
-        up2, down2 = _volumes(
-            N, t2.R, t // u, r // w, (s // 2) // v, m, t // u, (s // 2) // v
-        )
-        emit(f"ep_rmfe2_N{N}_s{size}_encode", e_us, upload_B=up2, m=m)
-        emit(f"ep_rmfe2_N{N}_s{size}_worker", w_us, m=m)
-        emit(f"ep_rmfe2_N{N}_s{size}_decode", d_us, download_B=down2)
+        spec = ProblemSpec(t=t, r=r, s=s, n=1, ring=base, N=N)
+        for name, sch in schemes.items():
+            m = sch.ring.D
+            idx = jnp.arange(sch.R, dtype=jnp.int32)
+            enc = jax.jit(lambda a, b, sch=sch: (sch.encode_a(a), sch.encode_b(b)))
+            FA, GB = enc(A, B)
+            worker = jax.jit(
+                lambda fa, gb, sch=sch: sch.worker_compute(fa, gb)
+            )
+            H = sch.worker_compute(FA, GB)
+            dec = jax.jit(lambda h, sch=sch, idx=idx: sch.decode(h, idx))
+            e_us = timeit(enc, A, B, iters=iters)
+            w_us = timeit(worker, FA[:1], GB[:1], iters=iters)
+            d_us = timeit(dec, H[: sch.R], iters=iters)
+            c = sch.costs(spec)
+            emit(f"{name}_N{N}_s{size}_encode", e_us,
+                 upload_B=int(c.upload * WORD), m=m)
+            emit(f"{name}_N{N}_s{size}_worker", w_us, m=m)
+            emit(f"{name}_N{N}_s{size}_decode", d_us,
+                 download_B=int(c.download * WORD))
 
 
 def run(full: bool = False):

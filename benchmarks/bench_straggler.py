@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EPCode, make_ring, straggler_latencies
+from repro.cdmm.api import EPSchemeAdapter
+from repro.core import make_ring, straggler_latencies
 
 from .common import emit, timeit
 
@@ -34,12 +35,12 @@ def run(full: bool = False):
         )
     # decode cost that buys the tolerance (N=8 paper regime, 256^2 blocks)
     ring = make_ring(2, 32, (3,))
-    code = EPCode(ring, N=8, u=2, v=2, w=1)
+    sch = EPSchemeAdapter(ring, N=8, u=2, v=2, w=1)
     rng = np.random.default_rng(0)
     A = ring.random(rng, (256, 256))
     B = ring.random(rng, (256, 256))
-    FA, GB = code.encode_a(A), code.encode_b(B)
-    H = code.worker_compute(FA, GB)
-    idx = jnp.arange(4, dtype=jnp.int32)
-    dec = jax.jit(lambda h: code.decode(h, idx))
-    emit("straggler_decode_cost_256", timeit(dec, H[:4]))
+    FA, GB = sch.encode_a(A), sch.encode_b(B)
+    H = sch.worker_compute(FA, GB)
+    idx = jnp.arange(sch.R, dtype=jnp.int32)
+    dec = jax.jit(lambda h: sch.decode(h, idx))
+    emit("straggler_decode_cost_256", timeit(dec, H[: sch.R]))

@@ -4,6 +4,9 @@ Recovery threshold + per-product amortized costs from the analytic models,
 plus a MEASURED head-to-head of the executable instances:
   Batch-EP_RMFE(n, N, u=v=w=1 MatDot-style or EP) vs CSA (= GCSA at
   u=v=w=1, kappa=n) on the same batch.
+
+Both executable schemes run through the unified CdmmScheme surface; the
+planner's view of the same trade-off is emitted as ``table1_plan_*`` rows.
 """
 from __future__ import annotations
 
@@ -11,7 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BatchEPRMFE, CSACode, gcsa_cost_model, make_ring
+from repro.cdmm import ProblemSpec, plan
+from repro.cdmm.api import BatchRMFEAdapter, CSAAdapter
+from repro.core import gcsa_cost_model, make_ring
 
 from .common import emit, timeit
 
@@ -20,6 +25,7 @@ def run(full: bool = False):
     # ----- analytic Table 1 (per-product amortized, base-ring elements) -----
     t = r = s = 512
     N = 64
+    base = make_ring(2, 32, ())
     for n in [2, 4, 8]:
         for kappa in sorted({1, n}):
             u, v, w = 2, 2, 2
@@ -30,48 +36,61 @@ def run(full: bool = False):
                 R=g.R, upload=int(g.upload), download=int(g.download),
                 worker_ops=int(g.worker_ops),
             )
-        base = make_ring(2, 32, ())
-        sch = BatchEPRMFE(base, n=n, N=N, u=2, v=2, w=2)
-        c = sch.costs(t, r, s)
+        sch = BatchRMFEAdapter(base, n, N, u=2, v=2, w=2)
+        c = sch.costs(ProblemSpec(t=t, r=r, s=s, n=n, ring=base, N=N))
         emit(
             f"table1_rmfe_n{n}", 0.0,
             R=c.R, upload=int(c.upload), download=int(c.download),
             worker_ops=int(c.worker_ops),
             threshold_ratio=round(g.R / c.R, 2),
         )
+        # the planner reproduces the Table-1 ranking from the same models:
+        # download compared at the matched (u,v,w)=(1,1,1), kappa=n point
+        # (GCSA's best-communication configuration — comparing against the
+        # download-optimal RMFE point would pit it against trivial R=1
+        # replication), best scheme reported under the upload objective
+        spec = ProblemSpec(t=t, r=r, s=s, n=n, ring=base, N=N)
+        p = plan(spec, objective="download")
+        gc = p.by_scheme("gcsa")
+        bm = next(
+            (c for c in p.candidates
+             if c.scheme == "batch_ep_rmfe" and (c.u, c.v, c.w) == (1, 1, 1)),
+            None,
+        )
+        pu = plan(spec, objective="upload")
+        emit(
+            f"table1_plan_n{n}", 0.0,
+            best_by_upload=pu.best.scheme, best_R=pu.best.costs.R,
+            download_ratio_gcsa_matched=(
+                round(gc.costs.download / bm.costs.download, 2)
+                if gc and bm else None
+            ),
+        )
 
     # ----- measured: CSA vs Batch-EP_RMFE, same batch of L=n=3 products -----
     size = 96 if not full else 256
-    ring16 = make_ring(2, 16, (4,))  # |T|=16 >= L+N
-    L, Ncsa = 3, 8
-    csa = CSACode(ring16, L=L, N=Ncsa)
-    rng = np.random.default_rng(0)
-    As = ring16.random(rng, (L, size, size))
-    Bs = ring16.random(rng, (L, size, size))
-    enc = jax.jit(lambda a, b: (csa.encode_a(a), csa.encode_b(b)))
-    FA, GB = enc(As, Bs)
-    H = csa.worker_compute(FA, GB)
-    idx = jnp.arange(csa.R, dtype=jnp.int32)
-    dec = jax.jit(lambda h: csa.decode(h, idx))
-    emit(f"csa_L{L}_N{Ncsa}_encode", timeit(enc, As, Bs), R=csa.R)
-    emit(
-        f"csa_L{L}_N{Ncsa}_worker",
-        timeit(jax.jit(lambda a, b: ring16.matmul(a, b)), FA[0], GB[0]),
-    )
-    emit(f"csa_L{L}_N{Ncsa}_decode", timeit(dec, H[: csa.R]), R=csa.R)
-
     base16 = make_ring(2, 16, ())
-    sch = BatchEPRMFE(base16, n=L, N=Ncsa, u=1, v=1, w=1)  # R = 1!
-    As2 = base16.random(rng, (sch.rmfe.n, size, size))
-    Bs2 = base16.random(rng, (sch.rmfe.n, size, size))
-    enc2 = jax.jit(lambda a, b: sch.encode(a, b))
-    FA2, GB2 = enc2(As2, Bs2)
-    H2 = sch.worker_compute(FA2, GB2)
-    idx2 = jnp.arange(sch.R, dtype=jnp.int32)
-    dec2 = jax.jit(lambda h: sch.decode(h, idx2))
-    emit(f"batchrmfe_L{L}_N{Ncsa}_encode", timeit(enc2, As2, Bs2), R=sch.R)
-    emit(
-        f"batchrmfe_L{L}_N{Ncsa}_worker",
-        timeit(jax.jit(lambda a, b: sch.ext.matmul(a, b)), FA2[0], GB2[0]),
-    )
-    emit(f"batchrmfe_L{L}_N{Ncsa}_decode", timeit(dec2, H2[: sch.R]), R=sch.R)
+    L, Ncsa = 3, 8
+    # CSA needs L + N = 11 exceptional points: adapter embeds Z_{2^16} into
+    # GR(2^16, 4) (|T| = 16), the same ring the seed benchmark used
+    csa = CSAAdapter(base16, n=L, N=Ncsa)
+    rng = np.random.default_rng(0)
+    schemes = {
+        f"csa_L{L}_N{Ncsa}": csa,
+        f"batchrmfe_L{L}_N{Ncsa}": BatchRMFEAdapter(base16, L, Ncsa, u=1, v=1, w=1),
+    }
+    for name, sch in schemes.items():
+        As = base16.random(rng, (sch.batch, size, size))
+        Bs = base16.random(rng, (sch.batch, size, size))
+        enc = jax.jit(lambda a, b, sch=sch: (sch.encode_a(a), sch.encode_b(b)))
+        FA, GB = enc(As, Bs)
+        H = sch.worker_compute(FA, GB)
+        idx = jnp.arange(sch.R, dtype=jnp.int32)
+        dec = jax.jit(lambda h, sch=sch, idx=idx: sch.decode(h, idx))
+        emit(f"{name}_encode", timeit(enc, As, Bs), R=sch.R)
+        emit(
+            f"{name}_worker",
+            timeit(jax.jit(lambda a, b, sch=sch: sch.worker_compute(a, b)),
+                   FA[:1], GB[:1]),
+        )
+        emit(f"{name}_decode", timeit(dec, H[: sch.R]), R=sch.R)

@@ -16,7 +16,7 @@ from repro.cdmm import CodedQuantMatmul, quantize_int8
 
 rng = np.random.default_rng(0)
 cm = CodedQuantMatmul(N=8, axis_name=None)  # GR(2^32, 3), R=4
-print(f"coded int8 matmul: N=8 workers, R={cm.R}, ring {cm.scheme.ext}")
+print(f"coded int8 matmul: N=8 workers, R={cm.R}, ring {cm.scheme.ring}")
 
 # a "transformer FFN" shaped problem: tokens x d_model @ d_model x d_ff
 x = rng.standard_normal((32, 256)).astype(np.float32)

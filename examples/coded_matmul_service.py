@@ -1,8 +1,9 @@
 """Distributed coded-matmul service on a real device mesh (SPMD).
 
-Spawns 8 host devices, runs the paper's master/worker protocol under
-shard_map with random straggler injection per request, and validates every
-response bit-exactly.  This is the standalone data-plane service described
+Spawns 8 host devices, plans a scheme for the request spec, and serves it
+with the ShardMapBackend: the paper's master/worker protocol under
+shard_map with random straggler injection per request, every response
+validated bit-exactly.  This is the standalone data-plane service described
 in DESIGN.md §4 (the paper's own deployment model).
 
     PYTHONPATH=src python examples/coded_matmul_service.py
@@ -16,20 +17,25 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
-from repro.cdmm import DistributedBatchRMFE, cdmm_shard_map
-from repro.core import BatchEPRMFE, make_ring, select_workers, simulate_stragglers
+from repro.cdmm import ProblemSpec, ShardMapBackend, coded_matmul, plan
+from repro.core import make_ring, simulate_stragglers
 
-mesh = Mesh(np.array(jax.devices()[:8]).reshape(8), ("workers",))
 Z32 = make_ring(2, 32, ())
-scheme = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)
-service = DistributedBatchRMFE(scheme, "workers")
-serve = jax.jit(cdmm_shard_map(service, mesh, "workers"))
+spec = ProblemSpec(t=64, r=64, s=64, n=2, ring=Z32, N=8, straggler_budget=4)
+p = plan(spec, objective="latency")
+scheme = p.instantiate()
+backend = ShardMapBackend(axis="workers")
+serve = jax.jit(lambda As, Bs, mask: coded_matmul(
+    As, Bs, scheme, backend=backend, mask=mask
+))
 
 rng = np.random.default_rng(0)
 key = jax.random.PRNGKey(0)
-print(f"service up: N=8 workers, R={scheme.R}, ring {scheme.ext}")
+print(
+    f"service up: {p.best.scheme} (u,v,w)=({p.best.u},{p.best.v},{p.best.w}), "
+    f"N={spec.N} workers, R={scheme.R}, ring {scheme.ring}"
+)
 for req in range(5):
     As = Z32.random(rng, (2, 64, 64))
     Bs = Z32.random(rng, (2, 64, 64))

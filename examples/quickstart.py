@@ -1,47 +1,56 @@
-"""Quickstart: the paper in ~50 lines.
+"""Quickstart: the paper in ~50 lines, through the unified CDMM API.
 
-Batch of n=2 matrix products over Z_{2^32} (machine words!), computed by 8
-coded workers, any 4 of which suffice — here 4 workers "die" and the result
-is still exact.
+A batch of n=2 matrix products over Z_{2^32} (machine words!) is described
+as a ProblemSpec; the cost-model planner ranks every registered scheme
+(Batch-EP_RMFE, GCSA, ...) x partition against the paper's Table-1 models
+and `coded_matmul` executes the winner — here 4 of 8 workers "die" and the
+result is still bit-exact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import BatchEPRMFE, make_ring
+from repro.cdmm import ProblemSpec, coded_matmul, plan
+from repro.core import make_ring
 
 # the data ring: Z_{2^32} — native uint32 wraparound arithmetic
 Z32 = make_ring(2, 32, ())
 
-# Batch-EP_RMFE: n=2 products packed by a (2,3)-RMFE into GR(2^32, 3),
-# EP code with u=v=2, w=1 over 8 workers -> recovery threshold R = 4
-scheme = BatchEPRMFE(Z32, n=2, N=8, u=2, v=2, w=1)
-print(f"extension ring: {scheme.ext}, recovery threshold R={scheme.R} of N=8")
+# two 64x64 products, 8 workers, must tolerate 4 stragglers
+spec = ProblemSpec(t=64, r=64, s=64, n=2, ring=Z32, N=8, straggler_budget=4)
+
+# rank every registered scheme x partition by predicted master upload
+# (under "download" every w=1 partition ties and the trivial R=1 replication
+# point wins; upload rewards actually splitting the work across workers)
+p = plan(spec, objective="upload")
+print(p.summary(limit=4))
+
+best = p.best
+print(
+    f"\nplanner picked {best.scheme} (u,v,w)=({best.u},{best.v},{best.w}): "
+    f"recovery threshold R={best.costs.R} of N={spec.N}"
+)
+# Table 1 headline under the "download" objective: GCSA pays ~n x more
+pd = plan(spec, objective="download")
+gcsa = pd.by_scheme("gcsa")
+print(
+    f"downloads (Table 1): gcsa needs "
+    f"{gcsa.costs.download / pd.best.costs.download:.1f}x the best RMFE point"
+)
 
 rng = np.random.default_rng(0)
 As = Z32.random(rng, (2, 64, 64))   # two 64x64 uint32 matrices
 Bs = Z32.random(rng, (2, 64, 64))
 
-# master: pack + encode -> per-worker tasks
-FA, GB = scheme.encode(As, Bs)
-
-# workers: local block products over the extension ring (the Pallas kernel
-# on TPU; jnp reference here)
-H = scheme.worker_compute(FA, GB)
-
 # stragglers: workers 1, 2, 5, 6 never respond
-alive = jnp.asarray([0, 3, 4, 7], dtype=jnp.int32)
-Cs = scheme.decode(jnp.take(H, alive, axis=0), alive)
+mask = jnp.asarray([True, False, False, True, True, False, False, True])
+
+# encode -> 8 simulated workers -> any-R decode, in one call
+Cs = coded_matmul(As, Bs, p, mask=mask)
 
 # exactness check against the direct products
 for i in range(2):
     expect = Z32.matmul(As[i], Bs[i])
     assert np.array_equal(np.asarray(Cs[i]), np.asarray(expect))
 print("recovered both products exactly from 4/8 workers ✓")
-
-# compare with GCSA's threshold at the same batch (paper Table 1)
-from repro.core import gcsa_cost_model
-
-g = gcsa_cost_model(64, 64, 64, 2, 2, 1, n=2, kappa=2, N=8, m_eff=3)
-print(f"GCSA would need R={g.R} of 8 workers; Batch-EP_RMFE needs {scheme.R}")

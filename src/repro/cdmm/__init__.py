@@ -1,8 +1,40 @@
-"""Distributed CDMM runtime: shard_map workers, straggler masks, quantized serving."""
+"""CDMM: unified scheme API, cost-model planner, pluggable execution backends.
+
+The front door is three calls::
+
+    spec = ProblemSpec(t, r, s, n=batch, ring=Z32, N=workers)
+    p = plan(spec, objective="download")
+    C = coded_matmul(A, B, p, backend="shard_map", mask=liveness)
+
+plus the legacy distributed runtime (shard_map master/worker bodies) and the
+quantized int8 serving plane built on top of it.
+"""
+from .api import (
+    CdmmScheme,
+    EPCosts,
+    ProblemSpec,
+    SchemeFamily,
+    get_scheme,
+    register_scheme,
+    registered_schemes,
+)
+from .backends import (
+    LocalSimBackend,
+    ShardMapBackend,
+    coded_matmul,
+    get_backend,
+    shard_worker_body,
+)
+from .planner import OBJECTIVES, Plan, PlanCandidate, plan
 from .runtime import DistributedEP, DistributedBatchRMFE, cdmm_shard_map
 from .quantized import CodedQuantMatmul, quantize_int8, lift_i8_to_ring, unlift_to_i32
 
 __all__ = [
+    "CdmmScheme", "EPCosts", "ProblemSpec", "SchemeFamily",
+    "get_scheme", "register_scheme", "registered_schemes",
+    "plan", "Plan", "PlanCandidate", "OBJECTIVES",
+    "coded_matmul", "get_backend", "LocalSimBackend", "ShardMapBackend",
+    "shard_worker_body",
     "DistributedEP", "DistributedBatchRMFE", "cdmm_shard_map",
     "CodedQuantMatmul", "quantize_int8", "lift_i8_to_ring", "unlift_to_i32",
 ]

@@ -1,0 +1,182 @@
+"""Pluggable execution backends behind one entry point: ``coded_matmul``.
+
+Every backend runs the same four-stage protocol against the unified
+:class:`~repro.cdmm.api.CdmmScheme` surface — encode, worker compute,
+response gather, any-R decode — so a Plan chosen by the planner executes
+identically everywhere:
+
+  * :class:`LocalSimBackend` — vmapped workers in one process, straggler
+    mask applied at decode.  Runs anywhere, bit-identical to the
+    distributed path (integer arithmetic end to end).
+  * :class:`ShardMapBackend` — SPMD master/worker protocol over a mesh
+    axis of N devices; each shard computes its own codeword product, the
+    responses are all-gathered and decoded from the first R live workers.
+    All shard_map calls route through the ``repro.compat`` shim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.straggler import select_workers
+from repro.kernels import gr_matmul, kernel_supported
+
+from .api import CdmmScheme
+from .planner import Plan
+
+__all__ = [
+    "LocalSimBackend",
+    "ShardMapBackend",
+    "shard_worker_body",
+    "coded_matmul",
+    "get_backend",
+]
+
+
+def _live_idx(scheme: CdmmScheme, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if mask is None:
+        return jnp.arange(scheme.R, dtype=jnp.int32)
+    return select_workers(mask, scheme.R)
+
+
+class LocalSimBackend:
+    """Simulate all N workers locally (vmapped); decode from the first R
+    responsive workers under ``mask``."""
+
+    name = "local"
+
+    def __call__(
+        self,
+        scheme: CdmmScheme,
+        A: jnp.ndarray,
+        B: jnp.ndarray,
+        mask: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        FA, GB = scheme.encode_a(A), scheme.encode_b(B)
+        H = scheme.worker_compute(FA, GB)
+        idx = _live_idx(scheme, mask)
+        return scheme.decode(jnp.take(H, idx, axis=0), idx)
+
+
+def shard_worker_body(
+    scheme: CdmmScheme,
+    axis: str,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Per-shard master/worker protocol: call inside shard_map over ``axis``
+    with all operands replicated.
+
+    Each shard encodes only its own codeword pair (encode-at-worker: the
+    broadcast-blocks upload model — no shard materialises all N shares),
+    computes the local block product (Pallas kernel when supported), then
+    all-gathers responses and decodes from the first R live workers.
+    """
+    i = lax.axis_index(axis)
+    fa = scheme.encode_a_at(A, i)
+    gb = scheme.encode_b_at(B, i)
+    if use_kernel and kernel_supported(scheme.ring):
+        h = gr_matmul(fa, gb, scheme.ring)
+    else:
+        h = scheme.worker_compute(fa[None], gb[None])[0]
+    H = lax.all_gather(h, axis)  # (N, ...)
+    idx = select_workers(mask, scheme.R)
+    return scheme.decode(jnp.take(H, idx, axis=0), idx)
+
+
+class ShardMapBackend:
+    """Run the protocol SPMD over a mesh axis with one device per worker."""
+
+    name = "shard_map"
+
+    def __init__(
+        self,
+        mesh: Optional[Mesh] = None,
+        axis: str = "workers",
+        use_kernel: bool = False,
+    ):
+        self.mesh, self.axis, self.use_kernel = mesh, axis, use_kernel
+
+    def _mesh_for(self, N: int) -> Mesh:
+        if self.mesh is not None:
+            return self.mesh
+        devs = jax.devices()
+        if len(devs) < N:
+            raise ValueError(
+                f"ShardMapBackend needs {N} devices for N={N} workers, "
+                f"have {len(devs)} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={N} to simulate)"
+            )
+        return Mesh(np.array(devs[:N]).reshape(N), (self.axis,))
+
+    def __call__(
+        self,
+        scheme: CdmmScheme,
+        A: jnp.ndarray,
+        B: jnp.ndarray,
+        mask: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        mesh = self._mesh_for(scheme.N)
+        if mask is None:
+            mask = jnp.ones(scheme.N, dtype=bool)
+        spec = P()  # CDMM redundancy is in the computation: operands replicated
+        f = shard_map(
+            lambda a, b, m: shard_worker_body(
+                scheme, self.axis, a, b, m, use_kernel=self.use_kernel
+            ),
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=spec,
+            check=False,
+        )
+        return f(A, B, mask)
+
+
+_BACKENDS = {
+    "local": LocalSimBackend,
+    "shard_map": ShardMapBackend,
+}
+
+
+def get_backend(backend: Union[None, str, object]):
+    """Normalize a backend argument: instance, name, or None (local)."""
+    if backend is None:
+        return LocalSimBackend()
+    if isinstance(backend, str):
+        try:
+            return _BACKENDS[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; one of {sorted(_BACKENDS)}"
+            ) from None
+    return backend
+
+
+def coded_matmul(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    plan: Union[Plan, CdmmScheme],
+    *,
+    backend: Union[None, str, object] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Execute a planned coded matmul: ``C = A @ B`` over ``plan.spec.ring``.
+
+    ``plan`` is a :class:`Plan` from :func:`repro.cdmm.planner.plan` (its
+    best candidate is instantiated and memoized) or an already-built scheme.
+    Shapes follow the scheme's arity: single schemes take ``(t, r, D0)`` x
+    ``(r, s, D0)``; batch schemes take ``(n, t, r, D0)`` x ``(n, r, s, D0)``.
+    ``mask`` is an (N,)-bool liveness vector; dead workers' responses are
+    provably never read by the any-R decode.
+    """
+    scheme = plan.instantiate() if isinstance(plan, Plan) else plan
+    return get_backend(backend)(scheme, A, B, mask)

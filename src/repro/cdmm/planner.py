@@ -1,0 +1,185 @@
+"""Cost-model planner: enumerate registered schemes x partitions, rank them.
+
+``plan(spec, objective)`` walks every registered scheme family and every
+valid EP partition (u, v, w) admitted by the straggler budget (the caps are
+lossless: R = uvw + w - 1 bounds u, v by R and w by (R+1)/2), plus RMFE
+packing factors n <= MAX_PACKING for the single-DMM variants, scores the
+analytic cost models, and returns a ranked :class:`Plan`.  Candidate enumeration never constructs a scheme — the
+``predict`` hooks are pure arithmetic — so planning is cheap even for large
+worker counts; only ``Plan.instantiate()`` pays the host-side Vandermonde /
+RMFE precompute, for the one configuration actually chosen.
+
+Objectives:
+  * ``"threshold"`` — minimize the recovery threshold R (maximize straggler
+    tolerance at fixed N),
+  * ``"download"``  — minimize master download volume (Table 1's headline:
+    Batch-EP_RMFE beats GCSA by ~1/n here),
+  * ``"upload"``    — minimize master upload volume,
+  * ``"latency"``   — minimize a serial-path proxy
+    (encode + worker + decode ops + upload + download elements).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.ep_codes import EPCosts
+
+from .api import CdmmScheme, ProblemSpec, get_scheme, registered_schemes
+
+__all__ = ["plan", "Plan", "PlanCandidate", "OBJECTIVES"]
+
+
+OBJECTIVES: Dict[str, callable] = {
+    "threshold": lambda c: float(c.R),
+    "download": lambda c: c.download,
+    "upload": lambda c: c.upload,
+    "latency": lambda c: (
+        c.encode_ops + c.worker_ops + c.decode_ops + c.upload + c.download
+    ),
+}
+
+
+@dataclass(frozen=True)
+class PlanCandidate:
+    """One feasible (scheme, partition, packing) configuration, scored."""
+
+    scheme: str
+    u: int
+    v: int
+    w: int
+    n: int  # packing/batch factor handed to the family's build
+    costs: EPCosts
+    score: float
+
+    def instantiate(self, spec: ProblemSpec) -> CdmmScheme:
+        return get_scheme(self.scheme).build(spec, self.u, self.v, self.w, self.n)
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Ranked feasible configurations for one ProblemSpec."""
+
+    spec: ProblemSpec
+    objective: str
+    candidates: Tuple[PlanCandidate, ...]
+    _cache: dict = field(default_factory=dict, repr=False, compare=False)
+
+    @property
+    def best(self) -> PlanCandidate:
+        return self.candidates[0]
+
+    def by_scheme(self, name: str) -> Optional[PlanCandidate]:
+        """Best-ranked candidate of a given scheme family, if any."""
+        for c in self.candidates:
+            if c.scheme == name:
+                return c
+        return None
+
+    def instantiate(self, rank: int = 0) -> CdmmScheme:
+        """Build (and memoize) the executable scheme at the given rank."""
+        if rank not in self._cache:
+            self._cache[rank] = self.candidates[rank].instantiate(self.spec)
+        return self._cache[rank]
+
+    def summary(self, limit: int = 8) -> str:
+        lines = [
+            f"Plan[{self.objective}] for {self.spec.n}x "
+            f"({self.spec.t}x{self.spec.r})@({self.spec.r}x{self.spec.s}) "
+            f"over {self.spec.ring}, N={self.spec.N} "
+            f"(straggler budget {self.spec.straggler_budget}):"
+        ]
+        for i, c in enumerate(self.candidates[:limit]):
+            lines.append(
+                f"  #{i} {c.scheme:<14} (u,v,w)=({c.u},{c.v},{c.w}) n={c.n} "
+                f"R={c.costs.R} m_eff={c.costs.m_eff:.1f} "
+                f"up={c.costs.upload:.3g} down={c.costs.download:.3g} "
+                f"score={c.score:.3g}"
+            )
+        return "\n".join(lines)
+
+
+MAX_PACKING = 8  # RMFE packing factors searched for single-DMM variants
+
+
+def _divisors(x: int, cap: int) -> List[int]:
+    return [d for d in range(1, min(x, cap) + 1) if x % d == 0]
+
+
+def _packing_candidates(spec: ProblemSpec, batched: bool) -> Iterable[int]:
+    if batched:
+        return (spec.n,)
+    # internal packing factors for the single-DMM RMFE variants; n=1 covers
+    # the unpacked families (their predicts reject n != 1 / n < 2 anyway).
+    # Bounded at MAX_PACKING: the extension degree grows like 2n-1, so the
+    # per-element saving flattens out while encode cost keeps rising.
+    dims = (set(_divisors(spec.r, cap=MAX_PACKING))
+            | set(_divisors(spec.s, cap=MAX_PACKING)))
+    return sorted(dims)
+
+
+def plan(
+    spec: ProblemSpec,
+    objective: str = "latency",
+    schemes: Optional[Sequence[str]] = None,
+    top_k: Optional[int] = None,
+) -> Plan:
+    """Rank every feasible (scheme, u, v, w, n) configuration for ``spec``.
+
+    ``schemes`` restricts the search to the named families (default: all
+    registered families matching the spec's batch arity); ``top_k`` caps the
+    returned ranking (default: keep every feasible candidate, so losing
+    schemes remain inspectable via ``Plan.by_scheme``).  Raises
+    ``ValueError`` when no configuration satisfies R <= N - straggler_budget.
+    """
+    spec.validate()
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; one of {sorted(OBJECTIVES)}"
+        )
+    score_fn = OBJECTIVES[objective]
+
+    requested = registered_schemes()
+    if schemes is not None:
+        requested = {name: get_scheme(name) for name in schemes}
+    # single-DMM families serve n=1 specs, batch families serve n>1 specs
+    families = {
+        name: fam for name, fam in requested.items()
+        if fam.batched == (spec.n > 1)
+    }
+    if not families:
+        kind = "a batched" if spec.n > 1 else "a single-product"
+        serving = sorted(
+            name for name, fam in registered_schemes().items()
+            if fam.batched == (spec.n > 1)
+        )
+        raise ValueError(
+            f"none of the schemes {sorted(requested)} serves {kind} spec "
+            f"(n={spec.n}); families that do: {serving}"
+        )
+
+    budgeted_R = spec.N - spec.straggler_budget
+    found: List[PlanCandidate] = []
+    # partition caps are lossless: R = uvw + w - 1 means u, v <= R <= N and
+    # w <= (R + 1) / 2, so nothing beyond them can pass the budget filter
+    for name, fam in sorted(families.items()):
+        for n in _packing_candidates(spec, fam.batched):
+            for u in _divisors(spec.t, cap=budgeted_R):
+                for v in _divisors(spec.s, cap=budgeted_R):
+                    for w in _divisors(spec.r, cap=(budgeted_R + 1) // 2):
+                        costs = fam.predict(spec, u, v, w, n)
+                        if costs is None or costs.R > budgeted_R:
+                            continue
+                        found.append(PlanCandidate(
+                            name, u, v, w, n, costs, score_fn(costs)
+                        ))
+
+    if not found:
+        raise ValueError(
+            f"no feasible scheme for {spec}: every registered configuration "
+            f"needs R > N - straggler_budget = {budgeted_R}"
+        )
+    found.sort(key=lambda c: (c.score, c.costs.R, c.scheme, c.u, c.v, c.w, c.n))
+    if top_k is not None:
+        found = found[:top_k]
+    return Plan(spec, objective, tuple(found))

@@ -12,24 +12,20 @@ Z_{2^32} makes the accumulation a Galois-ring matmul — EP_RMFE-coded across
 N workers, any R of which reconstruct the EXACT integer result (bit-identical
 dequantized output, no approximation from stragglers/failures).
 
-This is the first-class integration of the paper into the serving plane
-(DESIGN.md §4): `coded_ffn` wires it into transformer FFNs on the `model`
-mesh axis (N=16 workers → GR(2^32, 4), the paper's own 16-worker regime).
+Built on the unified scheme API: the coded matmul is the registered
+``ep_rmfe1`` scheme (MatDot-style contraction split, Cor IV.1) executed by
+the local or shard_map backend from `repro.cdmm.backends`.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
 
-from repro.core.batch_rmfe import BatchEPRMFE
-from repro.core.galois import Ring, make_ring
-from repro.core.straggler import select_workers
+from repro.core.galois import make_ring
 
-from .runtime import DistributedEP
+from .api import EPRMFE1Adapter
+from .backends import LocalSimBackend, shard_worker_body
 
 __all__ = ["quantize_int8", "CodedQuantMatmul", "lift_i8_to_ring", "unlift_to_i32"]
 
@@ -73,25 +69,14 @@ class CodedQuantMatmul:
     ):
         self.base = make_ring(2, 32, ())
         self.n = n
-        self.scheme = BatchEPRMFE(self.base, n=n, N=N, u=u, v=v, w=w)
+        self.scheme = EPRMFE1Adapter(self.base, n, N, u, v, w)
         self.axis = axis_name
-        self.dep = (
-            DistributedEP(self.scheme.code, axis_name, use_kernel=use_kernel)
-            if axis_name
-            else None
-        )
+        self.use_kernel = use_kernel
+        self._local = LocalSimBackend()
 
     @property
     def R(self) -> int:
         return self.scheme.R
-
-    def _split(self, X: jnp.ndarray, axis: int) -> jnp.ndarray:
-        """Split the contraction dim into n slices: (..., n*c, ...) -> (n, ..., c, ...)."""
-        n = self.n
-        d = X.shape[axis]
-        assert d % n == 0, (d, n)
-        parts = jnp.split(X, n, axis=axis)
-        return jnp.stack(parts, axis=0)
 
     def exact_int_matmul(
         self, qx: jnp.ndarray, qw: jnp.ndarray, mask: Optional[jnp.ndarray] = None
@@ -101,24 +86,17 @@ class CodedQuantMatmul:
         If ``axis_name`` was given this must run inside shard_map over that
         axis with qx/qw/mask replicated; otherwise it runs locally.
         """
-        Xs = self._split(lift_i8_to_ring(qx), axis=1)  # (n, t, d/n, 1)
-        Ws = self._split(lift_i8_to_ring(qw), axis=0)  # (n, d/n, f, 1)
-        A = self.scheme.pack(Xs)  # (t, d/n, Dm)
-        B = self.scheme.pack(Ws)  # (d/n, f, Dm)
-        if self.dep is not None:
-            C = self.dep(A, B, mask)
-        else:
-            idx = (
-                select_workers(mask, self.scheme.R)
-                if mask is not None
-                else jnp.arange(self.scheme.R, dtype=jnp.int32)
+        A = lift_i8_to_ring(qx)  # (t, d, 1)
+        B = lift_i8_to_ring(qw)  # (d, f, 1)
+        if self.axis is not None:
+            if mask is None:
+                mask = jnp.ones(self.scheme.N, dtype=bool)
+            C = shard_worker_body(
+                self.scheme, self.axis, A, B, mask, use_kernel=self.use_kernel
             )
-            C = self.scheme.code.run(A, B, idx)
-        Cs = self.scheme.unpack(C)  # (n, t, f, 1)
-        total = Cs[0]
-        for i in range(1, self.n):
-            total = self.base.add(total, Cs[i])
-        return unlift_to_i32(total)
+        else:
+            C = self._local(self.scheme, A, B, mask)
+        return unlift_to_i32(C)
 
     def __call__(
         self,

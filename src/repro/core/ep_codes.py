@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
-from jax import vmap
+from jax import lax, vmap
 
 from .galois import Ring
 from .polyops import (
@@ -31,7 +31,24 @@ from .polyops import (
     vandermonde,
 )
 
-__all__ = ["EPCode", "PlainCDMM", "ep_cost_model"]
+__all__ = ["EPCode", "PlainCDMM", "ep_cost_model", "smallest_embedding_ext"]
+
+
+def smallest_embedding_ext(base: Ring, npoints: int) -> Ring:
+    """Smallest extension of ``base`` with >= npoints exceptional points
+    (the coprimality bump in Ring.extend may make the first guess short).
+
+    Keep in lockstep with the analytic mirror ``repro.cdmm.api._embed_ext_D``
+    or planner predictions desynchronize from the instantiated ring.
+    """
+    m = 1
+    while base.p ** (base.D * m) < npoints:
+        m += 1
+    ext = base.extend(m) if m > 1 else base
+    while ext.p**ext.D < npoints:
+        m += 1
+        ext = base.extend(m)
+    return ext
 
 
 @dataclass(frozen=True)
@@ -133,6 +150,26 @@ class EPCode:
         out = self.ring.matmul(self.Vg, flat)
         return out.reshape(self.N, rb, sb, D)
 
+    def encode_a_at(self, A: jnp.ndarray, i) -> jnp.ndarray:
+        """Worker i's share f(alpha_i) only: (t, r, D) -> (tb, rb, D).
+
+        ``i`` may be a tracer (e.g. lax.axis_index inside shard_map) — this
+        is the encode-at-worker mode: each worker evaluates its own point
+        instead of materialising all N evaluations.
+        """
+        blocks = self.split_a(A)
+        K, tb, rb, D = blocks.shape
+        vf = lax.dynamic_index_in_dim(self.Vf, i, axis=0, keepdims=False)
+        out = self.ring.matmul(vf[None], blocks.reshape(K, tb * rb, D))[0]
+        return out.reshape(tb, rb, D)
+
+    def encode_b_at(self, B: jnp.ndarray, i) -> jnp.ndarray:
+        blocks = self.split_b(B)
+        K, rb, sb, D = blocks.shape
+        vg = lax.dynamic_index_in_dim(self.Vg, i, axis=0, keepdims=False)
+        out = self.ring.matmul(vg[None], blocks.reshape(K, rb * sb, D))[0]
+        return out.reshape(rb, sb, D)
+
     # -- worker --------------------------------------------------------------
 
     def worker_compute(self, FA: jnp.ndarray, GB: jnp.ndarray) -> jnp.ndarray:
@@ -188,14 +225,7 @@ class PlainCDMM:
 
     def __init__(self, base: Ring, N: int, u: int, v: int, w: int):
         self.base = base
-        # smallest extension with >= N exceptional points
-        m = 1
-        while base.p ** (base.D * m) < N:
-            m += 1
-        self.ext = base.extend(m) if m > 1 else base
-        while self.ext.p**self.ext.D < N:  # coprime bump may still be short
-            m += 1
-            self.ext = base.extend(m)
+        self.ext = smallest_embedding_ext(base, N)
         self.code = EPCode(self.ext, N, u, v, w)
 
     @property

@@ -22,12 +22,13 @@ likewise analytic.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
-from jax import vmap
+from jax import lax, vmap
 
 from .ep_codes import EPCosts
 from .galois import Ring
@@ -133,6 +134,21 @@ class CSACode:
             self.N, r, s, D
         )
 
+    def encode_a_at(self, As: jnp.ndarray, i) -> jnp.ndarray:
+        """Worker i's A~_i only (encode-at-worker; ``i`` may be a tracer)."""
+        L, t, r, D = As.shape
+        row = lax.dynamic_index_in_dim(self.enc_a, i, axis=0, keepdims=False)
+        return self.ring.matmul(row[None], As.reshape(L, t * r, D))[0].reshape(
+            t, r, D
+        )
+
+    def encode_b_at(self, Bs: jnp.ndarray, i) -> jnp.ndarray:
+        L, r, s, D = Bs.shape
+        row = lax.dynamic_index_in_dim(self.cauchy, i, axis=0, keepdims=False)
+        return self.ring.matmul(row[None], Bs.reshape(L, r * s, D))[0].reshape(
+            r, s, D
+        )
+
     def worker_compute(self, FA, GB):
         return vmap(self.ring.matmul)(FA, GB)
 
@@ -158,7 +174,23 @@ class CSACode:
             idx = jnp.arange(self.R, dtype=jnp.int32)
         return self.decode(jnp.take(H, idx, axis=0), idx)
 
-    def costs(self, t: int, r: int, s: int, base: Ring) -> EPCosts:
+    def costs(self, spec, r: Optional[int] = None, s: Optional[int] = None,
+              base: Optional[Ring] = None) -> EPCosts:
+        """Analytic costs for a ProblemSpec (shared ``costs(spec)`` surface).
+
+        The legacy positional form ``costs(t, r, s, base)`` still works but
+        is deprecated.
+        """
+        if r is not None:
+            warnings.warn(
+                "CSACode.costs(t, r, s, base) is deprecated; pass a "
+                "repro.cdmm.api.ProblemSpec instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            t = int(spec)
+        else:
+            t, r, s, base = spec.t, spec.r, spec.s, spec.ring
         return gcsa_cost_model(
             t, r, s, 1, 1, 1, self.L, self.L, self.N, self.ring.D / base.D
         )

@@ -45,14 +45,20 @@ class EPRMFE_I:
     def R(self) -> int:
         return self.batch.R
 
-    def split(self, A: jnp.ndarray, B: jnp.ndarray):
+    def split_a(self, A: jnp.ndarray) -> jnp.ndarray:
+        """(t, r, D) -> n column blocks (n, t, r/n, D)."""
         t, r, D = A.shape
-        r2, s, _ = B.shape
-        n = self.n
-        assert r % n == 0, f"n={n} must divide r={r}"
-        As = jnp.moveaxis(A.reshape(t, n, r // n, D), 1, 0)  # (n, t, r/n, D)
-        Bs = B.reshape(n, r // n, s, D)
-        return As, Bs
+        assert r % self.n == 0, f"n={self.n} must divide r={r}"
+        return jnp.moveaxis(A.reshape(t, self.n, r // self.n, D), 1, 0)
+
+    def split_b(self, B: jnp.ndarray) -> jnp.ndarray:
+        """(r, s, D) -> n row blocks (n, r/n, s, D)."""
+        r, s, D = B.shape
+        assert r % self.n == 0, f"n={self.n} must divide r={r}"
+        return B.reshape(self.n, r // self.n, s, D)
+
+    def split(self, A: jnp.ndarray, B: jnp.ndarray):
+        return self.split_a(A), self.split_b(B)
 
     def run(self, A, B, idx: Optional[jnp.ndarray] = None):
         As, Bs = self.split(A, B)
@@ -63,13 +69,10 @@ class EPRMFE_I:
         return acc
 
     def costs(self, t: int, r: int, s: int) -> EPCosts:
-        c = self.batch.code.costs(t, r // self.n, s, self.base, batch=self.n)
-        # the n sub-products all contribute to ONE output: download is not
-        # amortized (Cor IV.1: download O(ts/uv * m * R))
-        return EPCosts(
-            c.N, c.R, c.m_eff, c.upload, c.download * self.n,
-            c.encode_ops, c.decode_ops * self.n, c.worker_ops,
-        )
+        # one EP run on (t, r/n, s) computes the ONE output product: the
+        # r-dim shrink already carries the 1/n upload/encode/worker saving
+        # (Cor IV.1), and download/decoding are not amortized at all
+        return self.batch.code.costs(t, r // self.n, s, self.base, batch=1)
 
 
 class EPRMFE_II:
@@ -151,11 +154,7 @@ class EPRMFE_II:
         return self.unpack(C)
 
     def costs(self, t: int, r: int, s: int) -> EPCosts:
-        # one EP execution on (t/n, r, s/n) over the top ring; n^2 products out
-        c = self.code.costs(t // self.n, r, s // self.n, self.base, batch=1)
-        n2 = self.n * self.n
-        return EPCosts(
-            c.N, c.R, c.m_eff,
-            c.upload, c.download,          # raw volumes of the single run
-            c.encode_ops, c.decode_ops, c.worker_ops,
-        )
+        # one EP execution over the top ring: on (t/n, r, s/n) when A is
+        # split, on (t, r, s/n) in the paper's split_a=False configuration
+        ta = t // self.n if self.split_a else t
+        return self.code.costs(ta, r, s // self.n, self.base, batch=1)

@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cdmm import CodedQuantMatmul
+from repro.cdmm import CodedQuantMatmul, ProblemSpec, plan
 from repro.configs import ARCHS, ShapeConfig, smoke_shape
+from repro.core import make_ring
 from repro.models import build_model
 from repro.runtime.sharding import materialize
 from repro.core.straggler import select_workers, simulate_stragglers
@@ -59,9 +60,18 @@ def greedy_generate(
 
 
 def coded_matmul_demo(N: int = 8, fail: int = 3, size: int = 64, seed: int = 0):
-    """The paper's serving integration in one function: exact int8 matmul
-    via EP_RMFE-I that survives ``fail`` dead workers out of N."""
-    cm = CodedQuantMatmul(N=N, axis_name=None)
+    """The paper's serving integration in one function: the planner picks a
+    scheme for the problem spec, and the quantized coded matmul survives
+    ``fail`` dead workers out of N bit-identically."""
+    Z32 = make_ring(2, 32, ())
+    spec = ProblemSpec(
+        t=size, r=size, s=size, n=1, ring=Z32, N=N, straggler_budget=fail
+    )
+    # the quantized serving plane runs EP_RMFE-I; the planner picks its
+    # partition/packing for the spec
+    chosen = plan(spec, objective="latency", schemes=["ep_rmfe1"]).best
+    cm = CodedQuantMatmul(N=N, axis_name=None, n=chosen.n, u=chosen.u,
+                          v=chosen.v, w=chosen.w)
     rng = np.random.default_rng(seed)
     x = rng.standard_normal((size, size)).astype(np.float32)
     w = rng.standard_normal((size, size)).astype(np.float32)
@@ -71,7 +81,13 @@ def coded_matmul_demo(N: int = 8, fail: int = 3, size: int = 64, seed: int = 0):
     y = cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask))
     y_full = cm(jnp.asarray(x), jnp.asarray(w), mask=None)
     exact = bool(np.array_equal(np.asarray(y), np.asarray(y_full)))
-    return {"dead_workers": sorted(int(d) for d in dead), "bit_identical": exact}
+    return {
+        "scheme": chosen.scheme,
+        "partition": (chosen.u, chosen.v, chosen.w, chosen.n),
+        "R": chosen.costs.R,
+        "dead_workers": sorted(int(d) for d in dead),
+        "bit_identical": exact,
+    }
 
 
 def main():
@@ -87,7 +103,8 @@ def main():
     if args.coded:
         demo = coded_matmul_demo()
         print(
-            f"coded int8 matmul with dead workers {demo['dead_workers']}: "
+            f"coded int8 matmul [{demo['scheme']} (u,v,w,n)={demo['partition']} "
+            f"R={demo['R']}] with dead workers {demo['dead_workers']}: "
             f"bit-identical={demo['bit_identical']}"
         )
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a short benchmark smoke.
+#
+#   tools/ci.sh          # full tier-1 + table1 smoke
+#   tools/ci.sh --fast   # tier-1 only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== benchmark smoke: Table 1 (analytic + measured CSA head-to-head) =="
+  python -m benchmarks.run --only table1
+fi
+
+echo "CI OK"
