@@ -1,6 +1,7 @@
-"""Benchmark helpers: wall-clock timing of jitted callables + CSV rows."""
+"""Benchmark helpers: wall-clock timing of jitted callables + CSV/JSON rows."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
@@ -30,3 +31,18 @@ def emit(name: str, us_per_call: float, **derived):
 
 def header():
     print("name,us_per_call,derived")
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as machine-readable JSON (the CSV's twin):
+    ``[{"name": ..., "us": ..., "derived": {k: v-as-string}}, ...]``.
+    tools/check_bench.py diffs these files across commits."""
+    rows = []
+    for r in ROWS:
+        derived = dict(
+            kv.split("=", 1) for kv in r["derived"].split(";") if "=" in kv
+        )
+        rows.append({"name": r["name"], "us": r["us"], "derived": derived})
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+        f.write("\n")

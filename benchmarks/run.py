@@ -6,33 +6,47 @@
   straggler bench_straggler    — time-to-completion under straggler model
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(consumed by tools/check_bench.py for regression gating in CI).
 """
 import argparse
-import sys
 
 
 def main() -> None:
+    sections = ("figs", "table1", "kernels", "straggler")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
-        "--only", default=None,
-        choices=[None, "figs", "table1", "kernels", "straggler"],
+        "--only", default=None, metavar="SECTION[,SECTION...]",
+        help=f"comma-separated subset of {sections} (default: all)",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write emitted rows as JSON to PATH",
     )
     args = ap.parse_args()
 
+    only = set(sections if args.only is None else args.only.split(","))
+    unknown = only - set(sections)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; choose from {sections}")
+
     from . import bench_kernels, bench_single_cdmm, bench_straggler, bench_table1
-    from .common import header
+    from .common import header, write_json
 
     header()
-    if args.only in (None, "kernels"):
+    if "kernels" in only:
         bench_kernels.verify()
         bench_kernels.run(args.full)
-    if args.only in (None, "table1"):
+    if "table1" in only:
         bench_table1.run(args.full)
-    if args.only in (None, "straggler"):
+    if "straggler" in only:
         bench_straggler.run(args.full)
-    if args.only in (None, "figs"):
+    if "figs" in only:
         bench_single_cdmm.run(args.full)
+    if args.json:
+        write_json(args.json)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

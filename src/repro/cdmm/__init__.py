@@ -6,8 +6,12 @@ The front door is three calls::
     p = plan(spec, objective="download")
     C = coded_matmul(A, B, p, backend="shard_map", mask=liveness)
 
-plus the legacy distributed runtime (shard_map master/worker bodies) and the
-quantized int8 serving plane built on top of it.
+Backends: ``"local"`` (sync, vmapped in-process), ``"shard_map"`` (sync
+SPMD over a mesh axis), ``"elastic"`` (event-driven master that decodes at
+the R-th response and tolerates join/leave/slowdown — see
+``repro.cdmm.backends`` for the full comparison table); plus the legacy
+distributed runtime (shard_map master/worker bodies) and the quantized int8
+serving plane built on top of it.
 """
 from .api import (
     CdmmScheme,
@@ -23,18 +27,21 @@ from .backends import (
     ShardMapBackend,
     coded_matmul,
     get_backend,
+    register_backend,
     shard_worker_body,
 )
-from .planner import OBJECTIVES, Plan, PlanCandidate, plan
+from .elastic import ElasticBackend, ElasticStream, NotEnoughResponders
+from .planner import OBJECTIVES, Plan, PlanCandidate, expected_time_to_R, plan
 from .runtime import DistributedEP, DistributedBatchRMFE, cdmm_shard_map
 from .quantized import CodedQuantMatmul, quantize_int8, lift_i8_to_ring, unlift_to_i32
 
 __all__ = [
     "CdmmScheme", "EPCosts", "ProblemSpec", "SchemeFamily",
     "get_scheme", "register_scheme", "registered_schemes",
-    "plan", "Plan", "PlanCandidate", "OBJECTIVES",
-    "coded_matmul", "get_backend", "LocalSimBackend", "ShardMapBackend",
-    "shard_worker_body",
+    "plan", "Plan", "PlanCandidate", "OBJECTIVES", "expected_time_to_R",
+    "coded_matmul", "get_backend", "register_backend",
+    "LocalSimBackend", "ShardMapBackend", "shard_worker_body",
+    "ElasticBackend", "ElasticStream", "NotEnoughResponders",
     "DistributedEP", "DistributedBatchRMFE", "cdmm_shard_map",
     "CodedQuantMatmul", "quantize_int8", "lift_i8_to_ring", "unlift_to_i32",
 ]

@@ -30,10 +30,12 @@ executable adapter for the chosen partition.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from math import ceil, gcd, log
-from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.batch_rmfe import BatchEPRMFE
@@ -120,7 +122,44 @@ class CdmmScheme(Protocol):
 
     def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray: ...
 
+    # per-subset decode operator: a jitted closure specialized to one live
+    # set, LRU-cached by index tuple — the elastic backend fires it the
+    # moment the R-th response lands (no per-call retrace/re-lowering)
+    def decode_op(self, idx: Tuple[int, ...]) -> Callable[[jnp.ndarray], jnp.ndarray]: ...
+
     def costs(self, spec: ProblemSpec) -> EPCosts: ...
+
+
+class DecodeOpsMixin:
+    """Shared ``decode_op`` implementation for every scheme adapter.
+
+    ``decode_op((3, 5, 6))`` returns a jitted decoder for exactly that live
+    set: ``dec(H_subset) -> C`` where ``H_subset`` stacks the responses of
+    workers 3, 5, 6 in that order.  Operators are LRU-cached per scheme
+    instance (key = the live-index tuple) so an elastic master that sees the
+    same membership pattern twice pays the Vandermonde-solve trace once.
+    """
+
+    DECODE_OP_CACHE_SIZE = 64
+
+    def decode_op(self, idx: Tuple[int, ...]) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        idx = tuple(int(i) for i in idx)
+        if len(idx) != self.R:
+            raise ValueError(
+                f"{self.name}: decode_op needs exactly R={self.R} live "
+                f"workers, got {len(idx)}"
+            )
+        if len(set(idx)) != len(idx) or not all(0 <= i < self.N for i in idx):
+            raise ValueError(f"{self.name}: invalid live set {idx} for N={self.N}")
+        cache = self.__dict__.setdefault("_decode_ops", OrderedDict())
+        op = cache.pop(idx, None)
+        if op is None:
+            iarr = jnp.asarray(idx, dtype=jnp.int32)
+            op = jax.jit(lambda H: self.decode(H, iarr))
+            while len(cache) >= self.DECODE_OP_CACHE_SIZE:
+                cache.popitem(last=False)
+        cache[idx] = op  # re-insert = mark most-recently-used
+        return op
 
 
 # ---------------------------------------------------------------------------
@@ -128,7 +167,7 @@ class CdmmScheme(Protocol):
 # ---------------------------------------------------------------------------
 
 
-class EPSchemeAdapter:
+class EPSchemeAdapter(DecodeOpsMixin):
     """Plain EP code: data already lives in a ring with >= N points."""
 
     name = "ep"
@@ -162,7 +201,7 @@ class EPSchemeAdapter:
         return self.code.costs(spec.t, spec.r, spec.s, self.base)
 
 
-class PlainCDMMAdapter:
+class PlainCDMMAdapter(DecodeOpsMixin):
     """Lemma III.1 baseline: embed the base ring into an extension, run EP."""
 
     name = "plain"
@@ -198,7 +237,7 @@ class PlainCDMMAdapter:
         return self.inner.costs(spec.t, spec.r, spec.s)
 
 
-class EPRMFE1Adapter:
+class EPRMFE1Adapter(DecodeOpsMixin):
     """EP_RMFE-I (Cor IV.1): MatDot-style split of r into n RMFE-packed
     sub-products; decode sums them back into one C."""
 
@@ -244,7 +283,7 @@ class EPRMFE1Adapter:
         return self.inner.costs(spec.t, spec.r, spec.s)
 
 
-class EPRMFE2Adapter:
+class EPRMFE2Adapter(DecodeOpsMixin):
     """EP_RMFE-II (Cor IV.2), in the paper's measured §V configuration:
     B column-split and packed through phi_1, A embedded (split_a=False)."""
 
@@ -283,7 +322,7 @@ class EPRMFE2Adapter:
         return self.inner.costs(spec.t, spec.r, spec.s)
 
 
-class BatchRMFEAdapter:
+class BatchRMFEAdapter(DecodeOpsMixin):
     """Batch-EP_RMFE (Thm III.2): n products packed positionwise into one
     extension-ring product."""
 
@@ -320,7 +359,7 @@ class BatchRMFEAdapter:
         return self.inner.costs(spec.t, spec.r, spec.s)
 
 
-class CSAAdapter:
+class CSAAdapter(DecodeOpsMixin):
     """Executable GCSA point (u=v=w=1, kappa=n): the CSA batch code, run
     over the smallest embedding extension with >= n + N exceptional points."""
 

@@ -3,19 +3,39 @@
 Every backend runs the same four-stage protocol against the unified
 :class:`~repro.cdmm.api.CdmmScheme` surface — encode, worker compute,
 response gather, any-R decode — so a Plan chosen by the planner executes
-identically everywhere:
+identically everywhere.  Because every registered scheme is integer-exact,
+all three backends are bit-identical; they differ only in *when* the master
+gets its answer:
 
-  * :class:`LocalSimBackend` — vmapped workers in one process, straggler
-    mask applied at decode.  Runs anywhere, bit-identical to the
-    distributed path (integer arithmetic end to end).
-  * :class:`ShardMapBackend` — SPMD master/worker protocol over a mesh
-    axis of N devices; each shard computes its own codeword product, the
-    responses are all-gathered and decoded from the first R live workers.
-    All shard_map calls route through the ``repro.compat`` shim.
+===========  ===========================  ======================  ==============
+backend      execution model              completion time         when to use
+===========  ===========================  ======================  ==============
+local        all N workers vmapped in     one XLA program (no     tests, small
+             one process; straggler       straggler savings —     problems, any
+             mask applied at decode       everyone computes)      machine
+shard_map    SPMD over a mesh axis, one   barrier: all-gather     real meshes /
+             device per worker; encode-   waits for the slowest   multi-device
+             at-worker, all-gather,       of the N shards         runs
+             decode from first R live
+elastic      event-driven master loop     R-th fastest response:  straggler-y or
+             (``repro.cdmm.elastic``);    stragglers are raced    elastic worker
+             threaded per-worker          past, late joiners      pools; batch
+             dispatch, decode fires on    admitted, leavers       streams that
+             the R-th response            tolerated up to N - R   rescale
+===========  ===========================  ======================  ==============
+
+Determinism: ``local`` and ``shard_map`` always decode from the *first R
+live* workers (stable order), so repeated calls are bitwise-reproducible.
+``elastic`` decodes from the first R *arrivals* — a different-but-valid
+subset per run under a randomized trace — and still returns the same bits,
+because the any-R decode is exact for every subset (that invariant is
+property-tested in tests/test_elastic.py).
+
+All shard_map calls route through the ``repro.compat`` shim.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +56,38 @@ __all__ = [
     "shard_worker_body",
     "coded_matmul",
     "get_backend",
+    "register_backend",
+    "live_indices",
+    "encode_all",
+    "decode_from",
 ]
 
 
-def _live_idx(scheme: CdmmScheme, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+# --------------------------------------------------------------------------
+# shared protocol helpers (used by every backend, incl. cdmm.elastic)
+# --------------------------------------------------------------------------
+
+
+def live_indices(scheme: CdmmScheme, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """First-R live worker indices under ``mask`` (all-live when None)."""
     if mask is None:
         return jnp.arange(scheme.R, dtype=jnp.int32)
     return select_workers(mask, scheme.R)
+
+
+def encode_all(
+    scheme: CdmmScheme, A: jnp.ndarray, B: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Master-side encode of both operands: (N, ...) share stacks."""
+    return scheme.encode_a(A), scheme.encode_b(B)
+
+
+def decode_from(
+    scheme: CdmmScheme, H: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Any-R decode from the responses of workers ``idx`` (rows of ``H``
+    indexed by worker, i.e. the full (N, ...) response stack)."""
+    return scheme.decode(jnp.take(H, idx, axis=0), idx)
 
 
 class LocalSimBackend:
@@ -58,10 +103,9 @@ class LocalSimBackend:
         B: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
     ) -> jnp.ndarray:
-        FA, GB = scheme.encode_a(A), scheme.encode_b(B)
+        FA, GB = encode_all(scheme, A, B)
         H = scheme.worker_compute(FA, GB)
-        idx = _live_idx(scheme, mask)
-        return scheme.decode(jnp.take(H, idx, axis=0), idx)
+        return decode_from(scheme, H, live_indices(scheme, mask))
 
 
 def shard_worker_body(
@@ -141,10 +185,15 @@ class ShardMapBackend:
         return f(A, B, mask)
 
 
-_BACKENDS = {
+_BACKENDS: dict = {
     "local": LocalSimBackend,
     "shard_map": ShardMapBackend,
 }
+
+
+def register_backend(name: str, factory: Callable[[], object]) -> None:
+    """Register a backend factory under ``name`` (used by coded_matmul)."""
+    _BACKENDS[name] = factory
 
 
 def get_backend(backend: Union[None, str, object]):

@@ -5,7 +5,13 @@ from .ep_codes import EPCode, PlainCDMM, ep_cost_model, EPCosts
 from .batch_rmfe import BatchEPRMFE
 from .single_rmfe import EPRMFE_I, EPRMFE_II
 from .gcsa import CSACode, gcsa_cost_model, gr_solve
-from .straggler import select_workers, simulate_stragglers, straggler_latencies
+from .straggler import (
+    WorkerTrace,
+    sample_trace,
+    select_workers,
+    simulate_stragglers,
+    straggler_latencies,
+)
 
 __all__ = [
     "Ring", "make_ring", "find_irreducible_gfp", "is_irreducible_gfp",
@@ -14,4 +20,5 @@ __all__ = [
     "BatchEPRMFE", "EPRMFE_I", "EPRMFE_II",
     "CSACode", "gcsa_cost_model", "gr_solve",
     "select_workers", "simulate_stragglers", "straggler_latencies",
+    "WorkerTrace", "sample_trace",
 ]

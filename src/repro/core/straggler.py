@@ -5,16 +5,29 @@ responses.  In the SPMD emulation, worker liveness is a runtime boolean mask
 (from fault injection, deadline simulation or real collective timeouts);
 ``select_workers`` turns it into a worker-index vector usable by the
 traceable decoders (EPCode.decode / CSACode.decode take `idx` tracers).
+
+For the elastic backend (``repro.cdmm.elastic``) liveness is richer than a
+bool: workers join late, leave mid-batch, or run slow.  ``WorkerTrace``
+captures one realization of that membership process — per-worker join time,
+leave time and compute latency — and ``sample_trace`` draws randomized
+traces from the same heavy-tailed latency model the benchmarks use.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["select_workers", "simulate_stragglers", "straggler_latencies"]
+__all__ = [
+    "select_workers",
+    "simulate_stragglers",
+    "straggler_latencies",
+    "WorkerTrace",
+    "sample_trace",
+]
 
 
 def select_workers(mask: jnp.ndarray, R: int) -> jnp.ndarray:
@@ -52,3 +65,84 @@ def straggler_latencies(
     stragglers.  Used by benchmarks to compute time-to-R-th-response."""
     u = jax.random.uniform(key, (N,), minval=1e-6, maxval=1.0)
     return base_ms * (1.0 + tail * (u ** (-0.5) - 1.0))
+
+
+@dataclass(frozen=True)
+class WorkerTrace:
+    """One realization of an elastic worker-membership process.
+
+    Worker i joins at ``join_ms[i]``, leaves (forever) at ``leave_ms[i]``
+    (+inf = never leaves), and — once joined — takes ``compute_ms[i]`` of
+    wall-clock to produce its response.  A worker responds iff it finishes
+    before leaving; its response lands at ``join + compute``.
+    """
+
+    join_ms: np.ndarray  # (N,) float
+    leave_ms: np.ndarray  # (N,) float, +inf = stays for the whole batch
+    compute_ms: np.ndarray  # (N,) float
+
+    def __post_init__(self):
+        n = len(self.join_ms)
+        if not (len(self.leave_ms) == len(self.compute_ms) == n):
+            raise ValueError("WorkerTrace arrays must share one length N")
+
+    @property
+    def N(self) -> int:
+        return len(self.join_ms)
+
+    def response_ms(self) -> np.ndarray:
+        """(N,) virtual arrival time of each worker's response; +inf for
+        workers that leave before finishing (they never respond)."""
+        done = self.join_ms + self.compute_ms
+        return np.where(done <= self.leave_ms, done, np.inf)
+
+    def mask(self) -> np.ndarray:
+        """(N,) bool liveness: workers whose response eventually lands."""
+        return np.isfinite(self.response_ms())
+
+    def restrict(self, mask) -> "WorkerTrace":
+        """Trace with workers where ``mask`` is False forced dead (they
+        leave before joining) — composes an external fault mask with the
+        membership process."""
+        mask = np.asarray(mask, dtype=bool)
+        leave = np.where(mask, self.leave_ms, self.join_ms - 1.0)
+        return WorkerTrace(self.join_ms, leave, self.compute_ms)
+
+    def time_to_kth_response(self, k: int) -> float:
+        """Virtual time at which the k-th response lands (inf if < k land)."""
+        resp = np.sort(self.response_ms())
+        return float(resp[k - 1]) if k <= self.N else float("inf")
+
+    @staticmethod
+    def all_live(N: int) -> "WorkerTrace":
+        """Degenerate trace: everyone present from t=0, instant compute."""
+        z = np.zeros(N)
+        return WorkerTrace(z, np.full(N, np.inf), z)
+
+
+def sample_trace(
+    key: jax.Array,
+    N: int,
+    *,
+    base_ms: float = 1.0,
+    tail: float = 3.0,
+    join_spread_ms: float = 0.0,
+    leave_prob: float = 0.0,
+    slowdown_prob: float = 0.0,
+    slowdown_factor: float = 10.0,
+) -> WorkerTrace:
+    """Randomized join/leave/slowdown trace over the benchmark latency model.
+
+    Each worker draws a heavy-tailed compute latency; a ``slowdown_prob``
+    fraction is further slowed by ``slowdown_factor`` (persistent straggler);
+    joins are uniform in [0, join_spread_ms]; a ``leave_prob`` fraction
+    leaves halfway through its compute and never responds.
+    """
+    k_lat, k_join, k_leave, k_slow = jax.random.split(key, 4)
+    compute = np.asarray(straggler_latencies(k_lat, N, base_ms, tail), float)
+    slow = np.asarray(jax.random.uniform(k_slow, (N,))) < slowdown_prob
+    compute = np.where(slow, compute * slowdown_factor, compute)
+    join = np.asarray(jax.random.uniform(k_join, (N,))) * join_spread_ms
+    leaves = np.asarray(jax.random.uniform(k_leave, (N,))) < leave_prob
+    leave = np.where(leaves, join + 0.5 * compute, np.inf)
+    return WorkerTrace(join, leave, compute)

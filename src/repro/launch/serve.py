@@ -10,18 +10,17 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cdmm import CodedQuantMatmul, ProblemSpec, plan
-from repro.configs import ARCHS, ShapeConfig, smoke_shape
-from repro.core import make_ring
+from repro.cdmm import CodedQuantMatmul, ProblemSpec, coded_matmul, plan
+from repro.configs import ARCHS, ShapeConfig
+from repro.core import make_ring, sample_trace
 from repro.models import build_model
 from repro.runtime.sharding import materialize
-from repro.core.straggler import select_workers, simulate_stragglers
 
 
 def greedy_generate(
@@ -59,17 +58,29 @@ def greedy_generate(
     return {"generated": gen, "config": cfg}
 
 
-def coded_matmul_demo(N: int = 8, fail: int = 3, size: int = 64, seed: int = 0):
+def coded_matmul_demo(
+    N: int = 8, fail: int = 3, size: int = 64, seed: int = 0,
+    backend: str = "local",
+):
     """The paper's serving integration in one function: the planner picks a
     scheme for the problem spec, and the quantized coded matmul survives
-    ``fail`` dead workers out of N bit-identically."""
+    ``fail`` dead workers out of N bit-identically.
+
+    ``backend`` selects the execution path for the planned integer scheme:
+    ``"local"`` (sync, vmapped) or ``"elastic"`` (event-driven master that
+    decodes at the R-th response under a randomized join/slowdown trace —
+    the straggler-tolerant serving mode).
+    """
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
         t=size, r=size, s=size, n=1, ring=Z32, N=N, straggler_budget=fail
     )
     # the quantized serving plane runs EP_RMFE-I; the planner picks its
-    # partition/packing for the spec
-    chosen = plan(spec, objective="latency", schemes=["ep_rmfe1"]).best
+    # partition/packing for the spec (ranked by expected elastic completion
+    # when serving elastically)
+    objective = "time_to_R" if backend == "elastic" else "latency"
+    p = plan(spec, objective=objective, schemes=["ep_rmfe1"])
+    chosen = p.best
     cm = CodedQuantMatmul(N=N, axis_name=None, n=chosen.n, u=chosen.u,
                           v=chosen.v, w=chosen.w)
     rng = np.random.default_rng(seed)
@@ -81,12 +92,32 @@ def coded_matmul_demo(N: int = 8, fail: int = 3, size: int = 64, seed: int = 0):
     y = cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask))
     y_full = cm(jnp.asarray(x), jnp.asarray(w), mask=None)
     exact = bool(np.array_equal(np.asarray(y), np.asarray(y_full)))
+
+    # the same planned scheme through the pluggable backend plane: the
+    # elastic path races a randomized straggler trace and must still match
+    # the sync path bit for bit (integer-exact any-R decode)
+    scheme = p.instantiate()
+    A = scheme.base.random(rng, (size, size))
+    B = scheme.base.random(rng, (size, size))
+    exec_backend = backend
+    if backend == "elastic":
+        from repro.cdmm import ElasticBackend
+
+        trace = sample_trace(
+            jax.random.PRNGKey(seed), N, slowdown_prob=0.3
+        ).restrict(mask)
+        exec_backend = ElasticBackend(trace=trace)
+    C = coded_matmul(A, B, scheme, backend=exec_backend,
+                     mask=None if backend == "elastic" else jnp.asarray(mask))
+    C_sync = coded_matmul(A, B, scheme, backend="local")
+    backend_exact = bool(np.array_equal(np.asarray(C), np.asarray(C_sync)))
     return {
         "scheme": chosen.scheme,
+        "backend": backend,
         "partition": (chosen.u, chosen.v, chosen.w, chosen.n),
         "R": chosen.costs.R,
         "dead_workers": sorted(int(d) for d in dead),
-        "bit_identical": exact,
+        "bit_identical": exact and backend_exact,
     }
 
 
@@ -96,14 +127,20 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--coded", action="store_true")
+    ap.add_argument(
+        "--coded-backend", default="local", choices=["local", "elastic"],
+        help="execution backend for the coded matmul plane (elastic = "
+        "event-driven any-R decode, races past stragglers)",
+    )
     args = ap.parse_args()
     t0 = time.time()
     out = greedy_generate(args.arch, smoke=args.smoke, gen_len=args.gen_len)
     print(f"generated tokens ({time.time()-t0:.1f}s):\n{out['generated']}")
     if args.coded:
-        demo = coded_matmul_demo()
+        demo = coded_matmul_demo(backend=args.coded_backend)
         print(
-            f"coded int8 matmul [{demo['scheme']} (u,v,w,n)={demo['partition']} "
+            f"coded int8 matmul [{demo['scheme']} via {demo['backend']} "
+            f"(u,v,w,n)={demo['partition']} "
             f"R={demo['R']}] with dead workers {demo['dead_workers']}: "
             f"bit-identical={demo['bit_identical']}"
         )

@@ -11,8 +11,6 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import jax
-import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint import Checkpointer
@@ -34,8 +32,21 @@ def elastic_restore(
 
 
 def replan_batch(global_batch: int, live_data_shards: int) -> int:
-    """After losing nodes, keep the global batch by growing per-shard batch
-    (preferred: preserves optimization trajectory) — returns new local batch."""
-    assert global_batch % live_data_shards == 0 or live_data_shards > 0
-    per = -(-global_batch // live_data_shards)
-    return per
+    """After losing (or gaining) nodes, keep the global batch by resizing the
+    per-shard batch (preferred: preserves optimization trajectory) — returns
+    the new local batch.
+
+    When ``live_data_shards`` does not divide ``global_batch`` the per-shard
+    batch is the ceiling, so ``per * live >= global`` and the trailing shard
+    runs partially filled (callers pad or mask the remainder).  The CDMM
+    elastic backend (``repro.cdmm.elastic``) calls this on every membership
+    change to re-chunk a batch stream across the live pool.
+    """
+    if global_batch < 1:
+        raise ValueError(f"global_batch must be >= 1, got {global_batch}")
+    if live_data_shards < 1:
+        raise ValueError(
+            f"cannot replan onto {live_data_shards} live shards; "
+            "need at least one survivor"
+        )
+    return -(-global_batch // live_data_shards)

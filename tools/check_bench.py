@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff a fresh BENCH_*.json against a committed
+baseline and exit 1 when any timed row regresses beyond the threshold.
+
+    python tools/check_bench.py --baseline benchmarks/baseline.json \
+        --current BENCH_ci.json [--threshold 0.25]
+
+Rows are matched by ``name`` on the ``us`` (median microseconds per call)
+field.  Analytic rows (us == 0) and rows present in only one file are
+reported but never fail the gate — new benchmarks should not need a
+baseline update to land, and retired ones should not block forever.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: float(r["us"]) for r in rows}
+
+
+def compare(baseline: dict, current: dict, threshold: float):
+    """Returns (regressions, improvements, skipped) name lists."""
+    regressions, improvements, skipped = [], [], []
+    for name in sorted(baseline):
+        if name not in current:
+            skipped.append((name, "missing from current"))
+            continue
+        old, new = baseline[name], current[name]
+        if old <= 0.0 or new <= 0.0:
+            skipped.append((name, "analytic/untimed row"))
+            continue
+        ratio = new / old
+        if ratio > 1.0 + threshold:
+            regressions.append((name, old, new, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, old, new, ratio))
+    for name in sorted(set(current) - set(baseline)):
+        skipped.append((name, "new benchmark (no baseline)"))
+    return regressions, improvements, skipped
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--current", default="BENCH_ci.json")
+    ap.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="fail when new > old * (1 + threshold), default 0.25",
+    )
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    current = load_rows(args.current)
+    regressions, improvements, skipped = compare(
+        baseline, current, args.threshold
+    )
+
+    for name, why in skipped:
+        print(f"SKIP {name}: {why}")
+    for name, old, new, ratio in improvements:
+        print(f"FASTER {name}: {old:.1f}us -> {new:.1f}us ({ratio:.2f}x)")
+    for name, old, new, ratio in regressions:
+        print(
+            f"REGRESSION {name}: {old:.1f}us -> {new:.1f}us "
+            f"({ratio:.2f}x > {1 + args.threshold:.2f}x allowed)"
+        )
+    if regressions:
+        print(f"FAIL: {len(regressions)} benchmark(s) regressed "
+              f">{args.threshold:.0%} vs {args.baseline}")
+        return 1
+    print(f"OK: {len(baseline)} baseline rows checked, no regression "
+          f">{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

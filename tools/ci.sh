@@ -1,19 +1,41 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + a short benchmark smoke.
 #
-#   tools/ci.sh          # full tier-1 + table1 smoke
-#   tools/ci.sh --fast   # tier-1 only
+#   tools/ci.sh              # full tier-1 + bench smoke -> BENCH_ci.json + gate
+#   tools/ci.sh --fast       # tier-1 only
+#   tools/ci.sh --bench-only # bench smoke + gate only (CI's bench-smoke job,
+#                            # which already ran tier-1 via its `needs:`)
+#
+# The bench smoke writes machine-readable rows to BENCH_ci.json (uploaded as
+# a CI artifact so the perf trajectory accumulates across commits) and fails
+# if any timed row regresses >25% against benchmarks/baseline.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+if [[ "${1:-}" != "--bench-only" ]]; then
+  echo "== tier-1 tests =="
+  python -m pytest -x -q
+fi
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "== benchmark smoke: Table 1 (analytic + measured CSA head-to-head) =="
-  python -m benchmarks.run --only table1
+  echo "== benchmark smoke: Table 1 + straggler/elastic head-to-head =="
+  python -m benchmarks.run --only table1,straggler --json BENCH_ci.json
+  if [[ -f benchmarks/baseline.json ]]; then
+    echo "== benchmark regression gate (>25% vs benchmarks/baseline.json) =="
+    # the committed baseline's absolute timings are machine-specific, so the
+    # gate is blocking only in CI (or with BENCH_STRICT=1); on an arbitrary
+    # dev box a slower CPU must not fail the local entry point
+    if [[ -n "${CI:-}" || -n "${BENCH_STRICT:-}" ]]; then
+      python tools/check_bench.py \
+        --baseline benchmarks/baseline.json --current BENCH_ci.json
+    else
+      python tools/check_bench.py \
+        --baseline benchmarks/baseline.json --current BENCH_ci.json \
+        || echo "WARNING: bench gate failed (advisory outside CI)"
+    fi
+  fi
 fi
 
 echo "CI OK"
