@@ -4,6 +4,7 @@
   table1    bench_table1       — GCSA vs Batch-EP_RMFE (analytic + measured CSA)
   kernels   bench_kernels      — gr_matmul ref wall-clock + kernel schedule
   straggler bench_straggler    — time-to-completion under straggler model
+  secure    bench_secure       — T-private threshold/overhead sweep (privacy tax)
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
 ``--json PATH`` additionally writes the rows as machine-readable JSON
@@ -13,7 +14,7 @@ import argparse
 
 
 def main() -> None:
-    sections = ("figs", "table1", "kernels", "straggler")
+    sections = ("figs", "table1", "kernels", "straggler", "secure")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
@@ -31,7 +32,13 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown section(s) {sorted(unknown)}; choose from {sections}")
 
-    from . import bench_kernels, bench_single_cdmm, bench_straggler, bench_table1
+    from . import (
+        bench_kernels,
+        bench_secure,
+        bench_single_cdmm,
+        bench_straggler,
+        bench_table1,
+    )
     from .common import header, write_json
 
     header()
@@ -42,6 +49,8 @@ def main() -> None:
         bench_table1.run(args.full)
     if "straggler" in only:
         bench_straggler.run(args.full)
+    if "secure" in only:
+        bench_secure.run(args.full)
     if "figs" in only:
         bench_single_cdmm.run(args.full)
     if args.json:

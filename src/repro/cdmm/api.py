@@ -9,13 +9,19 @@ Table 1).  The legacy classes each grew their own surface
 master/worker protocol so planners, backends, benchmarks and services can
 treat any scheme interchangeably:
 
-    encode_a(A) -> (N, ...)      per-worker A shares (master-side encode)
-    encode_b(B) -> (N, ...)      per-worker B shares
-    encode_a_at(A, i)            worker i's share only (encode-at-worker)
-    encode_b_at(B, i)
-    worker_compute(FA, GB)       vmapped over the leading worker axis
-    decode(H, idx)               recover C from ANY R responses
-    costs(spec) -> EPCosts       the analytic Table-1 cost model
+    encode_a(A, key=None) -> (N, ...)   per-worker A shares (master-side)
+    encode_b(B, key=None) -> (N, ...)   per-worker B shares
+    encode_a_at(A, i, key=None)         worker i's share only (at-worker)
+    encode_b_at(B, i, key=None)
+    worker_compute(FA, GB)              vmapped over the leading worker axis
+    decode(H, idx)                      recover C from ANY R responses
+    costs(spec) -> EPCosts              the analytic Table-1 cost model
+
+``key`` is the masked-randomness seam: secure (T-private) schemes derive
+their mask coefficients from it (same key => bit-identical codewords on
+every backend), non-secure schemes must tolerate and ignore it.  Every
+scheme advertises ``privacy_t`` — the number of colluding workers whose
+shares reveal nothing about the inputs (0 for all non-secure families).
 
 Shape convention: schemes with ``batch == 1`` consume a single product
 ``A (t, r, D0), B (r, s, D0) -> C (t, s, D0)`` over the *data* ring
@@ -48,6 +54,11 @@ from repro.core.ep_codes import (
 )
 from repro.core.galois import Ring
 from repro.core.gcsa import CSACode, gcsa_cost_model
+from repro.core.secure import (
+    SecureBatchEPRMFE,
+    SecureEP,
+    secure_recovery_threshold,
+)
 from repro.core.single_rmfe import EPRMFE_I, EPRMFE_II
 
 __all__ = [
@@ -64,6 +75,8 @@ __all__ = [
     "EPRMFE2Adapter",
     "BatchRMFEAdapter",
     "CSAAdapter",
+    "SecureEPAdapter",
+    "SecureBatchRMFEAdapter",
 ]
 
 
@@ -74,6 +87,10 @@ class ProblemSpec:
     ``n`` products of shape ``(t, r) @ (r, s)`` over the data ring ``ring``,
     distributed over ``N`` workers of which up to ``straggler_budget`` may
     never respond (so the chosen scheme needs R <= N - straggler_budget).
+    ``privacy_t > 0`` additionally demands T-collusion privacy: any
+    ``privacy_t`` workers' shares must be statistically independent of A and
+    B, which restricts the plan to secure scheme families (and raises their
+    recovery threshold by the mask interference terms).
     """
 
     t: int
@@ -83,6 +100,7 @@ class ProblemSpec:
     ring: Optional[Ring] = None
     N: int = 8
     straggler_budget: int = 0
+    privacy_t: int = 0
 
     def validate(self) -> None:
         if self.ring is None:
@@ -95,6 +113,19 @@ class ProblemSpec:
             raise ValueError(
                 f"straggler_budget={self.straggler_budget} out of [0, N={self.N})"
             )
+        if self.privacy_t < 0:
+            raise ValueError(f"privacy_t={self.privacy_t} must be >= 0")
+        if self.privacy_t > 0:
+            # cheapest secure configuration is u=v=w=1: R = 2T + 1
+            min_R = secure_recovery_threshold(1, 1, 1, self.privacy_t)
+            if min_R > self.N - self.straggler_budget:
+                raise ValueError(
+                    f"privacy_t={self.privacy_t} needs recovery threshold "
+                    f">= {min_R} but straggler_budget="
+                    f"{self.straggler_budget} leaves only "
+                    f"N - budget = {self.N - self.straggler_budget} "
+                    f"guaranteed responders; raise N or relax the budgets"
+                )
 
 
 @runtime_checkable
@@ -107,16 +138,19 @@ class CdmmScheme(Protocol):
     ring: Ring  # codeword (extension) ring
     base: Ring  # data ring
     batch: int  # products consumed per execution (1 = single DMM)
+    privacy_t: int  # collusion tolerance (0 = no privacy)
 
-    def encode_a(self, A: jnp.ndarray) -> jnp.ndarray: ...
+    # ``key`` is optional keyed-encode randomness: secure schemes require it
+    # (mask derivation), every other adapter accepts and ignores it
+    def encode_a(self, A: jnp.ndarray, key=None) -> jnp.ndarray: ...
 
-    def encode_b(self, B: jnp.ndarray) -> jnp.ndarray: ...
+    def encode_b(self, B: jnp.ndarray, key=None) -> jnp.ndarray: ...
 
     # encode-at-worker: worker i's share only (i may be a tracer) — an SPMD
     # shard computes its own codeword instead of materialising all N
-    def encode_a_at(self, A: jnp.ndarray, i) -> jnp.ndarray: ...
+    def encode_a_at(self, A: jnp.ndarray, i, key=None) -> jnp.ndarray: ...
 
-    def encode_b_at(self, B: jnp.ndarray, i) -> jnp.ndarray: ...
+    def encode_b_at(self, B: jnp.ndarray, i, key=None) -> jnp.ndarray: ...
 
     def worker_compute(self, FA: jnp.ndarray, GB: jnp.ndarray) -> jnp.ndarray: ...
 
@@ -141,6 +175,7 @@ class DecodeOpsMixin:
     """
 
     DECODE_OP_CACHE_SIZE = 64
+    privacy_t = 0  # non-secure default; secure adapters override
 
     def decode_op(self, idx: Tuple[int, ...]) -> Callable[[jnp.ndarray], jnp.ndarray]:
         idx = tuple(int(i) for i in idx)
@@ -179,16 +214,16 @@ class EPSchemeAdapter(DecodeOpsMixin):
         self.N, self.R, self.batch = N, self.code.R, 1
         self.partition = (u, v, w)
 
-    def encode_a(self, A):
+    def encode_a(self, A, key=None):
         return self.code.encode_a(A)
 
-    def encode_b(self, B):
+    def encode_b(self, B, key=None):
         return self.code.encode_b(B)
 
-    def encode_a_at(self, A, i):
+    def encode_a_at(self, A, i, key=None):
         return self.code.encode_a_at(A, i)
 
-    def encode_b_at(self, B, i):
+    def encode_b_at(self, B, i, key=None):
         return self.code.encode_b_at(B, i)
 
     def worker_compute(self, FA, GB):
@@ -214,16 +249,16 @@ class PlainCDMMAdapter(DecodeOpsMixin):
         self.N, self.R, self.batch = N, self.inner.R, 1
         self.partition = (u, v, w)
 
-    def encode_a(self, A):
+    def encode_a(self, A, key=None):
         return self.code.encode_a(self.ring.embed_base(A, self.base))
 
-    def encode_b(self, B):
+    def encode_b(self, B, key=None):
         return self.code.encode_b(self.ring.embed_base(B, self.base))
 
-    def encode_a_at(self, A, i):
+    def encode_a_at(self, A, i, key=None):
         return self.code.encode_a_at(self.ring.embed_base(A, self.base), i)
 
-    def encode_b_at(self, B, i):
+    def encode_b_at(self, B, i, key=None):
         return self.code.encode_b_at(self.ring.embed_base(B, self.base), i)
 
     def worker_compute(self, FA, GB):
@@ -257,16 +292,16 @@ class EPRMFE1Adapter(DecodeOpsMixin):
     def _pack_b(self, B):
         return self.inner.batch.pack(self.inner.split_b(B))
 
-    def encode_a(self, A):
+    def encode_a(self, A, key=None):
         return self.code.encode_a(self._pack_a(A))
 
-    def encode_b(self, B):
+    def encode_b(self, B, key=None):
         return self.code.encode_b(self._pack_b(B))
 
-    def encode_a_at(self, A, i):
+    def encode_a_at(self, A, i, key=None):
         return self.code.encode_a_at(self._pack_a(A), i)
 
-    def encode_b_at(self, B, i):
+    def encode_b_at(self, B, i, key=None):
         return self.code.encode_b_at(self._pack_b(B), i)
 
     def worker_compute(self, FA, GB):
@@ -300,16 +335,16 @@ class EPRMFE2Adapter(DecodeOpsMixin):
         self.N, self.R, self.batch = N, self.inner.R, 1
         self.partition = (u, v, w)
 
-    def encode_a(self, A):
+    def encode_a(self, A, key=None):
         return self.code.encode_a(self.inner.pack_a(A))
 
-    def encode_b(self, B):
+    def encode_b(self, B, key=None):
         return self.code.encode_b(self.inner.pack_b(B))
 
-    def encode_a_at(self, A, i):
+    def encode_a_at(self, A, i, key=None):
         return self.code.encode_a_at(self.inner.pack_a(A), i)
 
-    def encode_b_at(self, B, i):
+    def encode_b_at(self, B, i, key=None):
         return self.code.encode_b_at(self.inner.pack_b(B), i)
 
     def worker_compute(self, FA, GB):
@@ -337,16 +372,16 @@ class BatchRMFEAdapter(DecodeOpsMixin):
         self.batch = self.inner.rmfe.n  # actual packed batch (>= requested n)
         self.partition = (u, v, w)
 
-    def encode_a(self, As):
+    def encode_a(self, As, key=None):
         return self.code.encode_a(self.inner.pack(As))
 
-    def encode_b(self, Bs):
+    def encode_b(self, Bs, key=None):
         return self.code.encode_b(self.inner.pack(Bs))
 
-    def encode_a_at(self, As, i):
+    def encode_a_at(self, As, i, key=None):
         return self.code.encode_a_at(self.inner.pack(As), i)
 
-    def encode_b_at(self, Bs, i):
+    def encode_b_at(self, Bs, i, key=None):
         return self.code.encode_b_at(self.inner.pack(Bs), i)
 
     def worker_compute(self, FA, GB):
@@ -372,16 +407,16 @@ class CSAAdapter(DecodeOpsMixin):
         self.N, self.R, self.batch = N, self.code.R, n
         self.partition = (1, 1, 1)
 
-    def encode_a(self, As):
+    def encode_a(self, As, key=None):
         return self.code.encode_a(self.ring.embed_base(As, self.base))
 
-    def encode_b(self, Bs):
+    def encode_b(self, Bs, key=None):
         return self.code.encode_b(self.ring.embed_base(Bs, self.base))
 
-    def encode_a_at(self, As, i):
+    def encode_a_at(self, As, i, key=None):
         return self.code.encode_a_at(self.ring.embed_base(As, self.base), i)
 
-    def encode_b_at(self, Bs, i):
+    def encode_b_at(self, Bs, i, key=None):
         return self.code.encode_b_at(self.ring.embed_base(Bs, self.base), i)
 
     def worker_compute(self, FA, GB):
@@ -392,6 +427,85 @@ class CSAAdapter(DecodeOpsMixin):
 
     def costs(self, spec: ProblemSpec) -> EPCosts:
         return self.code.costs(spec)
+
+
+class SecureEPAdapter(DecodeOpsMixin):
+    """T-private EP code (secure single DMM): the base ring is embedded into
+    the smallest extension with >= N + 1 exceptional points and a masked EP
+    code runs there.  ``encode_*`` REQUIRE a jax.random key."""
+
+    name = "ep_secure"
+
+    def __init__(self, base: Ring, N: int, u: int, v: int, w: int, T: int):
+        self.inner = SecureEP(base, N, u, v, w, T)
+        self.code = self.inner.code
+        self.base = base
+        self.ring = self.inner.ext
+        self.N, self.R, self.batch = N, self.inner.R, 1
+        self.privacy_t = T
+        self.partition = (u, v, w)
+
+    def encode_a(self, A, key=None):
+        return self.code.encode_a(self.inner.embed(A), key=key)
+
+    def encode_b(self, B, key=None):
+        return self.code.encode_b(self.inner.embed(B), key=key)
+
+    def encode_a_at(self, A, i, key=None):
+        return self.code.encode_a_at(self.inner.embed(A), i, key=key)
+
+    def encode_b_at(self, B, i, key=None):
+        return self.code.encode_b_at(self.inner.embed(B), i, key=key)
+
+    def worker_compute(self, FA, GB):
+        return self.code.worker_compute(FA, GB)
+
+    def decode(self, H, idx):
+        return self.inner.decode(H, idx)
+
+    def costs(self, spec: ProblemSpec) -> EPCosts:
+        return self.inner.costs(spec.t, spec.r, spec.s)
+
+
+class SecureBatchRMFEAdapter(DecodeOpsMixin):
+    """T-private Batch-EP_RMFE (secure batch DMM): n products RMFE-packed
+    into one extension-ring product, computed by a masked EP code whose
+    extension carries >= N + 1 exceptional points."""
+
+    name = "ep_rmfe_secure"
+
+    def __init__(
+        self, base: Ring, n: int, N: int, u: int, v: int, w: int, T: int
+    ):
+        self.inner = SecureBatchEPRMFE(base, n, N, u, v, w, T)
+        self.code = self.inner.code
+        self.base = base
+        self.ring = self.inner.ext
+        self.N, self.R = N, self.inner.R
+        self.batch = self.inner.rmfe.n  # actual packed batch (>= requested n)
+        self.privacy_t = T
+        self.partition = (u, v, w)
+
+    def encode_a(self, As, key=None):
+        return self.code.encode_a(self.inner.pack(As), key=key)
+
+    def encode_b(self, Bs, key=None):
+        return self.code.encode_b(self.inner.pack(Bs), key=key)
+
+    def encode_a_at(self, As, i, key=None):
+        return self.code.encode_a_at(self.inner.pack(As), i, key=key)
+
+    def encode_b_at(self, Bs, i, key=None):
+        return self.code.encode_b_at(self.inner.pack(Bs), i, key=key)
+
+    def worker_compute(self, FA, GB):
+        return self.code.worker_compute(FA, GB)
+
+    def decode(self, H, idx):
+        return self.inner.decode(H, idx)
+
+    def costs(self, spec: ProblemSpec) -> EPCosts:
+        return self.inner.costs(spec.t, spec.r, spec.s)
 
 
 # ---------------------------------------------------------------------------
@@ -508,6 +622,36 @@ def _predict_gcsa(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
     return gcsa_cost_model(spec.t, spec.r, spec.s, 1, 1, 1, n, n, spec.N, m_eff)
 
 
+def _predict_ep_secure(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
+    p, D0 = spec.ring.p, spec.ring.D
+    T = spec.privacy_t
+    if T < 1 or n != 1:
+        return None  # secure families only serve privacy_t >= 1 specs
+    if spec.t % u or spec.r % w or spec.s % v:
+        return None
+    # evaluation skips the zero point, so the embedding needs N + 1 points
+    m_eff = _embed_ext_D(p, D0, spec.N + 1) / D0
+    return ep_cost_model(
+        spec.t, spec.r, spec.s, u, v, w, spec.N, m_eff, privacy_t=T
+    )
+
+
+def _predict_rmfe_secure(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
+    p, D0 = spec.ring.p, spec.ring.D
+    T = spec.privacy_t
+    if T < 1 or n != spec.n:
+        return None
+    if spec.t % u or spec.r % w or spec.s % v:
+        return None
+    extD, actual = _rmfe_ext_D(p, D0, n, _min_m_for_points(p, D0, spec.N + 1))
+    if actual != n or p**extD < spec.N + 1:
+        return None
+    return ep_cost_model(
+        spec.t, spec.r, spec.s, u, v, w, spec.N, extD / D0, batch=n,
+        privacy_t=T,
+    )
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -580,4 +724,18 @@ register_scheme(SchemeFamily(
     "gcsa", True,
     lambda spec, u, v, w, n: CSAAdapter(spec.ring, n, spec.N),
     _predict_gcsa,
+))
+register_scheme(SchemeFamily(
+    "ep_secure", False,
+    lambda spec, u, v, w, n: SecureEPAdapter(
+        spec.ring, spec.N, u, v, w, spec.privacy_t
+    ),
+    _predict_ep_secure,
+))
+register_scheme(SchemeFamily(
+    "ep_rmfe_secure", True,
+    lambda spec, u, v, w, n: SecureBatchRMFEAdapter(
+        spec.ring, n, spec.N, u, v, w, spec.privacy_t
+    ),
+    _predict_rmfe_secure,
 ))

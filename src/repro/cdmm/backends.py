@@ -76,10 +76,18 @@ def live_indices(scheme: CdmmScheme, mask: Optional[jnp.ndarray]) -> jnp.ndarray
 
 
 def encode_all(
-    scheme: CdmmScheme, A: jnp.ndarray, B: jnp.ndarray
+    scheme: CdmmScheme,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    key: Optional[jax.Array] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Master-side encode of both operands: (N, ...) share stacks."""
-    return scheme.encode_a(A), scheme.encode_b(B)
+    """Master-side encode of both operands: (N, ...) share stacks.
+
+    ``key`` is the masked-randomness seam for secure schemes (they derive
+    independent A/B-side masks from it internally); non-secure schemes
+    ignore it.
+    """
+    return scheme.encode_a(A, key=key), scheme.encode_b(B, key=key)
 
 
 def decode_from(
@@ -102,8 +110,9 @@ class LocalSimBackend:
         A: jnp.ndarray,
         B: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
+        key: Optional[jax.Array] = None,
     ) -> jnp.ndarray:
-        FA, GB = encode_all(scheme, A, B)
+        FA, GB = encode_all(scheme, A, B, key=key)
         H = scheme.worker_compute(FA, GB)
         return decode_from(scheme, H, live_indices(scheme, mask))
 
@@ -116,6 +125,7 @@ def shard_worker_body(
     mask: jnp.ndarray,
     *,
     use_kernel: bool = False,
+    key: Optional[jax.Array] = None,
 ) -> jnp.ndarray:
     """Per-shard master/worker protocol: call inside shard_map over ``axis``
     with all operands replicated.
@@ -124,10 +134,12 @@ def shard_worker_body(
     broadcast-blocks upload model — no shard materialises all N shares),
     computes the local block product (Pallas kernel when supported), then
     all-gathers responses and decodes from the first R live workers.
+    ``key`` (replicated) feeds every shard the SAME mask randomness, so the
+    secure codeword polynomial is consistent across workers.
     """
     i = lax.axis_index(axis)
-    fa = scheme.encode_a_at(A, i)
-    gb = scheme.encode_b_at(B, i)
+    fa = scheme.encode_a_at(A, i, key=key)
+    gb = scheme.encode_b_at(B, i, key=key)
     if use_kernel and kernel_supported(scheme.ring):
         h = gr_matmul(fa, gb, scheme.ring)
     else:
@@ -168,14 +180,17 @@ class ShardMapBackend:
         A: jnp.ndarray,
         B: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
+        key: Optional[jax.Array] = None,
     ) -> jnp.ndarray:
         mesh = self._mesh_for(scheme.N)
         if mask is None:
             mask = jnp.ones(scheme.N, dtype=bool)
         spec = P()  # CDMM redundancy is in the computation: operands replicated
+        # the key rides in as a closure constant, replicated to every shard
         f = shard_map(
             lambda a, b, m: shard_worker_body(
-                scheme, self.axis, a, b, m, use_kernel=self.use_kernel
+                scheme, self.axis, a, b, m,
+                use_kernel=self.use_kernel, key=key,
             ),
             mesh=mesh,
             in_specs=(spec, spec, spec),
@@ -217,6 +232,7 @@ def coded_matmul(
     *,
     backend: Union[None, str, object] = None,
     mask: Optional[jnp.ndarray] = None,
+    key: Optional[jax.Array] = None,
 ) -> jnp.ndarray:
     """Execute a planned coded matmul: ``C = A @ B`` over ``plan.spec.ring``.
 
@@ -226,6 +242,11 @@ def coded_matmul(
     ``(r, s, D0)``; batch schemes take ``(n, t, r, D0)`` x ``(n, r, s, D0)``.
     ``mask`` is an (N,)-bool liveness vector; dead workers' responses are
     provably never read by the any-R decode.
+
+    ``key`` is a ``jax.random`` key feeding the masked-randomness seam of
+    secure (``privacy_t > 0``) schemes — REQUIRED for them, ignored by the
+    rest.  The same key yields bit-identical codewords (hence decodes) on
+    every backend; privacy requires a fresh key per call.
     """
     scheme = plan.instantiate() if isinstance(plan, Plan) else plan
-    return get_backend(backend)(scheme, A, B, mask)
+    return get_backend(backend)(scheme, A, B, mask, key=key)

@@ -82,22 +82,31 @@ def _response_order(resp_ms: np.ndarray) -> np.ndarray:
     return np.lexsort((np.arange(len(resp_ms)), resp_ms))
 
 
-def _worker_closures(scheme: CdmmScheme):
+def _worker_closures(scheme: CdmmScheme, keyed: bool = False):
     """Jitted (encode_at, compute) closures, cached per scheme instance so
     repeated elastic calls never re-trace.  The worker id is a traced scalar
     (one compilation covers all N workers); worker shares are donated to the
-    compute (single-use buffers; donation is a warn-only no-op on CPU)."""
-    ops = scheme.__dict__.get("_elastic_ops")
-    if ops is None:
-        encode_at = jax.jit(
-            lambda a, b, i: (scheme.encode_a_at(a, i), scheme.encode_b_at(b, i))
-        )
-        compute = jax.jit(
+    compute (single-use buffers; donation is a warn-only no-op on CPU).
+    ``keyed`` selects the keyed-encode variant (the masked-randomness seam:
+    the PRNG key is a traced argument so rekeying never re-compiles)."""
+    ops = scheme.__dict__.setdefault("_elastic_ops", {})
+    ename = "encode_keyed" if keyed else "encode"
+    if ename not in ops:
+        if keyed:
+            ops[ename] = jax.jit(lambda a, b, i, k: (
+                scheme.encode_a_at(a, i, key=k),
+                scheme.encode_b_at(b, i, key=k),
+            ))
+        else:
+            ops[ename] = jax.jit(lambda a, b, i: (
+                scheme.encode_a_at(a, i), scheme.encode_b_at(b, i)
+            ))
+    if "compute" not in ops:
+        ops["compute"] = jax.jit(
             lambda fa, gb: scheme.worker_compute(fa[None], gb[None])[0],
             donate_argnums=() if jax.default_backend() == "cpu" else (0, 1),
         )
-        ops = scheme.__dict__["_elastic_ops"] = (encode_at, compute)
-    return ops
+    return ops[ename], ops["compute"]
 
 
 class ElasticBackend:
@@ -166,8 +175,9 @@ class ElasticBackend:
         A: jnp.ndarray,
         B: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
+        key: Optional[jax.Array] = None,
     ) -> jnp.ndarray:
-        C, self.last_stats = self.run(scheme, A, B, mask)
+        C, self.last_stats = self.run(scheme, A, B, mask, key=key)
         return C
 
     def run(
@@ -176,10 +186,11 @@ class ElasticBackend:
         A: jnp.ndarray,
         B: jnp.ndarray,
         mask: Optional[jnp.ndarray] = None,
+        key: Optional[jax.Array] = None,
     ) -> Tuple[jnp.ndarray, ElasticStats]:
         t0 = time.perf_counter()
         if self.trace is None and mask is None:
-            return self._run_all_live(scheme, A, B, t0)
+            return self._run_all_live(scheme, A, B, t0, key)
         trace = self.trace or WorkerTrace.all_live(scheme.N)
         if trace.N != scheme.N:
             raise ValueError(
@@ -187,15 +198,15 @@ class ElasticBackend:
             )
         if mask is not None:
             trace = trace.restrict(np.asarray(mask, dtype=bool))
-        return self._run_traced(scheme, A, B, trace, t0)
+        return self._run_traced(scheme, A, B, trace, t0, key)
 
     # -- all-live fast path --------------------------------------------------
 
-    def _run_all_live(self, scheme, A, B, t0):
+    def _run_all_live(self, scheme, A, B, t0, key=None):
         """Everyone present and instant: one vmapped XLA program, but the
         decode still routes through the cached per-subset operator so the
         warm path shares compilations with the event loop."""
-        FA, GB = encode_all(scheme, A, B)
+        FA, GB = encode_all(scheme, A, B, key=key)
         H = scheme.worker_compute(FA, GB)
         idx = tuple(range(scheme.R))
         C = scheme.decode_op(idx)(H[: scheme.R])
@@ -212,7 +223,7 @@ class ElasticBackend:
 
     # -- event-driven master loop --------------------------------------------
 
-    def _run_traced(self, scheme, A, B, trace: WorkerTrace, t0):
+    def _run_traced(self, scheme, A, B, trace: WorkerTrace, t0, key=None):
         N, R = scheme.N, scheme.R
         resp = trace.response_ms()
         responders = np.flatnonzero(np.isfinite(resp))
@@ -230,7 +241,7 @@ class ElasticBackend:
         dispatch = [i for i in np.argsort(trace.join_ms, kind="stable")
                     if trace.join_ms[i] <= t_R]
 
-        encode_at, compute = _worker_closures(scheme)
+        encode_at, compute = _worker_closures(scheme, keyed=key is not None)
 
         q: "queue.Queue" = queue.Queue()
         scale = self.simulate_ms_scale
@@ -254,7 +265,10 @@ class ElasticBackend:
         # dispatch in join order; encode of worker k overlaps the pool's
         # compute of workers < k (the master thread never blocks here)
         for i in dispatch:
-            fa, gb = encode_at(A, B, jnp.int32(i))
+            if key is None:
+                fa, gb = encode_at(A, B, jnp.int32(i))
+            else:
+                fa, gb = encode_at(A, B, jnp.int32(i), key)
             pool.submit(worker_task, int(i), fa, gb)
         # response queue: consume until the R-th needed response lands;
         # straggler tasks drain into the dead queue after `done` fires

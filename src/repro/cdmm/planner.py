@@ -127,7 +127,9 @@ class Plan:
             f"Plan[{self.objective}] for {self.spec.n}x "
             f"({self.spec.t}x{self.spec.r})@({self.spec.r}x{self.spec.s}) "
             f"over {self.spec.ring}, N={self.spec.N} "
-            f"(straggler budget {self.spec.straggler_budget}):"
+            f"(straggler budget {self.spec.straggler_budget}"
+            + (f", privacy_t={self.spec.privacy_t}" if self.spec.privacy_t else "")
+            + "):"
         ]
         for i, c in enumerate(self.candidates[:limit]):
             lines.append(
@@ -171,6 +173,13 @@ def plan(
     returned ranking (default: keep every feasible candidate, so losing
     schemes remain inspectable via ``Plan.by_scheme``).  Raises
     ``ValueError`` when no configuration satisfies R <= N - straggler_budget.
+
+    When ``spec.privacy_t > 0`` only configurations whose cost model
+    advertises ``privacy_t >= spec.privacy_t`` are feasible — i.e. only the
+    secure scheme families; a plan can never silently downgrade a privacy
+    requirement to an insecure scheme.  Budget combinations that exhaust N
+    (``2*privacy_t + 1 > N - straggler_budget`` even at the cheapest secure
+    partition) raise a ValueError naming both budgets.
     """
     spec.validate()
     if objective not in OBJECTIVES:
@@ -210,14 +219,21 @@ def plan(
                         costs = fam.predict(spec, u, v, w, n)
                         if costs is None or costs.R > budgeted_R:
                             continue
+                        if costs.privacy_t < spec.privacy_t:
+                            continue  # never hand back an insecure scheme
                         found.append(PlanCandidate(
                             name, u, v, w, n, costs, score_fn(costs)
                         ))
 
     if not found:
+        privacy = (
+            f" meeting privacy_t={spec.privacy_t} (secure schemes need "
+            f"R >= 2*privacy_t + 1 and N + 1 exceptional points)"
+            if spec.privacy_t > 0 else ""
+        )
         raise ValueError(
-            f"no feasible scheme for {spec}: every registered configuration "
-            f"needs R > N - straggler_budget = {budgeted_R}"
+            f"no feasible scheme for {spec}: every registered configuration"
+            f"{privacy} needs R > N - straggler_budget = {budgeted_R}"
         )
     found.sort(key=lambda c: (c.score, c.costs.R, c.scheme, c.u, c.v, c.w, c.n))
     if top_k is not None:

@@ -5,6 +5,13 @@ from .ep_codes import EPCode, PlainCDMM, ep_cost_model, EPCosts
 from .batch_rmfe import BatchEPRMFE
 from .single_rmfe import EPRMFE_I, EPRMFE_II
 from .gcsa import CSACode, gcsa_cost_model, gr_solve
+from .secure import (
+    SecureBatchEPRMFE,
+    SecureEP,
+    SecureEPCode,
+    secure_recovery_threshold,
+    smallest_secure_ext,
+)
 from .straggler import (
     WorkerTrace,
     sample_trace,
@@ -19,6 +26,8 @@ __all__ = [
     "EPCode", "PlainCDMM", "ep_cost_model", "EPCosts",
     "BatchEPRMFE", "EPRMFE_I", "EPRMFE_II",
     "CSACode", "gcsa_cost_model", "gr_solve",
+    "SecureEPCode", "SecureEP", "SecureBatchEPRMFE",
+    "secure_recovery_threshold", "smallest_secure_ext",
     "select_workers", "simulate_stragglers", "straggler_latencies",
     "WorkerTrace", "sample_trace",
 ]

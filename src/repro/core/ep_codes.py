@@ -31,7 +31,13 @@ from .polyops import (
     vandermonde,
 )
 
-__all__ = ["EPCode", "PlainCDMM", "ep_cost_model", "smallest_embedding_ext"]
+__all__ = [
+    "EPCode",
+    "PlainCDMM",
+    "ep_cost_model",
+    "secure_recovery_threshold",
+    "smallest_embedding_ext",
+]
 
 
 def smallest_embedding_ext(base: Ring, npoints: int) -> Ring:
@@ -54,7 +60,12 @@ def smallest_embedding_ext(base: Ring, npoints: int) -> Ring:
 @dataclass(frozen=True)
 class EPCosts:
     """Analytic cost model, counted in elements/ops of a reference base ring
-    (the paper counts everything in GR(p^e, d))."""
+    (the paper counts everything in GR(p^e, d)).
+
+    ``privacy_t`` is the collusion tolerance the configuration provides: any
+    ``privacy_t`` workers' shares are statistically independent of the
+    inputs (0 = no privacy — every non-secure scheme family).
+    """
 
     N: int
     R: int
@@ -64,23 +75,37 @@ class EPCosts:
     encode_ops: float
     decode_ops: float
     worker_ops: float
+    privacy_t: int = 0
+
+
+def secure_recovery_threshold(u: int, v: int, w: int, T: int) -> int:
+    """R of the T-private EP code: mask degrees sit at uvw..uvw+T-1 on both
+    operands, so deg h = 2uvw + 2T - 2 (see repro.core.secure)."""
+    return 2 * u * v * w + 2 * T - 1
 
 
 def ep_cost_model(
     t: int, r: int, s: int, u: int, v: int, w: int, N: int, m_eff: float,
-    batch: int = 1,
+    batch: int = 1, privacy_t: int = 0,
 ) -> EPCosts:
     """Costs of one EP execution over an extension with [ext:base] = m_eff,
-    amortized over ``batch`` products (paper Thm III.2 accounting)."""
-    R = u * v * w + w - 1
+    amortized over ``batch`` products (paper Thm III.2 accounting).
+
+    ``privacy_t > 0`` switches to the T-private variant: the recovery
+    threshold jumps to 2uvw + 2T - 1 (interference terms) and each encode
+    carries T extra mask coefficients per operand; per-worker share sizes —
+    hence upload — are unchanged.
+    """
+    T = privacy_t
+    R = secure_recovery_threshold(u, v, w, T) if T else u * v * w + w - 1
     tb, rb, sb = t // u, r // w, s // v
     up = N * (tb * rb + rb * sb) * m_eff / batch
     down = R * tb * sb * m_eff / batch
     # soft-O op counts (log^2 factors reported separately in benchmarks)
-    enc = N * (tb * rb * (u * w) + rb * sb * (w * v)) * m_eff**2 / batch
+    enc = N * (tb * rb * (u * w + T) + rb * sb * (w * v + T)) * m_eff**2 / batch
     dec = R * R * tb * sb * m_eff**2 / batch
     worker = tb * rb * sb * m_eff**2 / batch
-    return EPCosts(N, R, m_eff, up, down, enc, dec, worker)
+    return EPCosts(N, R, m_eff, up, down, enc, dec, worker, T)
 
 
 class EPCode:

@@ -568,6 +568,23 @@ class Ring:
         arr = rng.integers(0, self.q, size=tuple(shape) + (self.D,), dtype=np.uint64)
         return jnp.asarray(arr.astype(np.uint32))
 
+    def random_jax(self, key: jax.Array, shape: Tuple[int, ...]) -> jnp.ndarray:
+        """Uniform ring elements from a ``jax.random`` key (traceable).
+
+        This is the masked-randomness seam used by the secure (T-private)
+        schemes: the same key yields the same mask coefficients whether the
+        encode runs master-side (``encode_*``) or at-worker
+        (``encode_*_at``), so every execution backend produces bit-identical
+        codewords from identical keys.
+        """
+        full = tuple(shape) + (self.D,)
+        if self.p == 2:
+            # q = 2^e divides 2^32: masking uniform 32-bit words stays uniform
+            return self._modq(jax.random.bits(key, full, dtype=jnp.uint32))
+        return jax.random.randint(key, full, 0, self.q, dtype=jnp.int32).astype(
+            jnp.uint32
+        )
+
     def random_units(self, rng: np.random.Generator, shape: Tuple[int, ...]) -> jnp.ndarray:
         arr = rng.integers(0, self.q, size=tuple(shape) + (self.D,), dtype=np.uint64)
         arr = arr.astype(np.uint32)

@@ -1,0 +1,343 @@
+"""T-private (secure) CDMM over Galois rings: EP codes with random masking.
+
+The RMFE machinery of this repo comes from MPC [CCXY18]; this module closes
+the loop and makes the codes themselves secret-sharing.  Following the
+secure-MDS / GASP-style construction adapted to Galois rings, each encoding
+polynomial carries ``T`` uniformly random mask coefficients placed ABOVE the
+data terms:
+
+    f(x) = sum_ij A_ij x^{(i-1)w + (j-1)}        + sum_{k<T} Z_k x^{uvw + k}
+    g(x) = sum_kl B_kl x^{(w-k) + (l-1)uw}       + sum_{k<T} W_k x^{uvw + k}
+
+with Z_k, W_k i.i.d. uniform over the codeword ring.  Worker i receives
+(f(a_i), g(a_i)) for an exceptional point a_i.
+
+Privacy (T-collusion, per operand).  For any subset S of <= T workers the
+A-side shares are ``data_S + M_S z`` where ``M_S = [a_i^{uvw + k}]`` factors
+as ``diag(a_i^{uvw}) @ Vandermonde_S``.  Digit-lift exceptional points are
+units except the zero point — so this code evaluates at points 1..N (the
+zero point is EXCLUDED; it would hand worker 0 an unmasked data block) —
+and pairwise differences of exceptional points are units, hence
+``det M_S = prod a_i^{uvw} * prod_{i<j} (a_j - a_i)`` is a unit and ``M_S``
+is invertible over the ring.  Uniform masks therefore make the S-shares
+exactly uniform, independent of the data: any <= T workers learn nothing
+(tests/test_secure.py proves the distribution match exhaustively on a small
+ring).  T+1 shares are NOT independent of the data — the recovery/privacy
+trade the planner exposes as ``ProblemSpec.privacy_t``.
+
+Correctness.  The mask degrees start at uvw, strictly above every read-out
+exponent of C (max exp_c = uvw - 1), so all interference terms
+(g·x^{uvw}Z, f·x^{uvw}W, x^{2uvw}ZW) live at degrees >= uvw and never
+pollute the C blocks; deg h = 2uvw + 2T - 2 gives the recovery threshold
+
+    R_secure = 2uvw + 2T - 1
+
+(matching secure MatDot's 2(p+T)-1 at u=v=1).  Decoding is the same any-R
+Lagrange interpolation as the non-secure EP code.
+
+Randomness seam.  Masks are derived from a ``jax.random`` key
+(``Ring.random_jax``): the A-side uses fold_in(key, 0), the B-side
+fold_in(key, 1), so master-side ``encode_*`` and at-worker ``encode_*_at``
+regenerate identical mask coefficients from the same key and every
+execution backend (local / shard_map / elastic) decodes bit-identically.
+"""
+from __future__ import annotations
+
+from math import ceil, log
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, vmap
+
+from .ep_codes import EPCosts, ep_cost_model, secure_recovery_threshold
+from .galois import Ring
+from .polyops import as_u32, lagrange_coeff_matrix, s_vandermonde
+from .rmfe import build_rmfe
+
+__all__ = [
+    "SecureEPCode",
+    "SecureEP",
+    "SecureBatchEPRMFE",
+    "secure_recovery_threshold",
+    "smallest_secure_ext",
+]
+
+
+def smallest_secure_ext(base: Ring, N: int) -> Ring:
+    """Smallest extension of ``base`` whose exceptional set supports N
+    *secure* evaluation points, i.e. >= N + 1 digit-lift points (the zero
+    point is skipped — it is not a unit and would leak an unmasked share)."""
+    m = 1
+    while base.p ** (base.D * m) < N + 1:
+        m += 1
+    ext = base.extend(m) if m > 1 else base
+    while ext.p**ext.D < N + 1:
+        m += 1
+        ext = base.extend(m)
+    return ext
+
+
+class SecureEPCode:
+    """T-private EP code over ``ring`` with N workers and partition (u, v, w).
+
+    Requires N + 1 <= p^D exceptional points (evaluation skips the zero
+    point) and R = 2uvw + 2T - 1 <= N.  ``encode_a/encode_b`` take a
+    ``jax.random`` key; the deterministic mask seam makes all backends
+    reproducible from the key.  ``encode_a_with_masks`` exposes the mask
+    coefficients directly for the exhaustive privacy tests.
+    """
+
+    def __init__(self, ring: Ring, N: int, u: int, v: int, w: int, T: int):
+        if T < 1:
+            raise ValueError(f"privacy requires T >= 1, got T={T}")
+        self.ring = ring
+        self.N, self.u, self.v, self.w, self.T = N, u, v, w, T
+        uvw = u * v * w
+        self.R = secure_recovery_threshold(u, v, w, T)
+        if self.R > N:
+            raise ValueError(
+                f"secure recovery threshold {self.R} = 2uvw + 2T - 1 > N={N}"
+            )
+        if N + 1 > ring.p**ring.D:
+            raise ValueError(
+                f"T-private code needs N+1={N + 1} exceptional points (zero "
+                f"point excluded) but |T(ring)|={ring.p}^{ring.D}; extend the ring"
+            )
+        # points 1..N: every one a unit, pairwise differences units
+        pts = ring.exceptional_points(N + 1)[1:]
+        self.points_np = pts
+        self.points = jnp.asarray(pts)
+        # data exponents (0-indexed) as in EPCode, masks at uvw .. uvw+T-1
+        self.exp_f = [i * w + j for i in range(u) for j in range(w)]
+        self.exp_g = [(w - 1 - k) + l * u * w for k in range(w) for l in range(v)]
+        self.mask_exp = [uvw + k for k in range(T)]
+        self.deg_h = 2 * uvw + 2 * T - 2
+        assert self.deg_h + 1 == self.R
+        V = s_vandermonde(ring, pts, self.R)  # (N, R, D) object
+        self.Vf = jnp.asarray(as_u32(V[:, self.exp_f + self.mask_exp]))
+        self.Vg = jnp.asarray(as_u32(V[:, self.exp_g + self.mask_exp]))
+        self.exp_c = np.array(
+            [[i * w + (w - 1) + l * u * w for l in range(v)] for i in range(u)]
+        )  # (u, v) — all < uvw, below every interference term
+
+    # -- partitioning (identical block layout to EPCode) --------------------
+
+    def split_a(self, A: jnp.ndarray) -> jnp.ndarray:
+        t, r, D = A.shape
+        u, w = self.u, self.w
+        assert t % u == 0 and r % w == 0, (A.shape, (u, w))
+        blocks = A.reshape(u, t // u, w, r // w, D)
+        return blocks.transpose(0, 2, 1, 3, 4).reshape(u * w, t // u, r // w, D)
+
+    def split_b(self, B: jnp.ndarray) -> jnp.ndarray:
+        r, s, D = B.shape
+        w, v = self.w, self.v
+        assert r % w == 0 and s % v == 0, (B.shape, (w, v))
+        blocks = B.reshape(w, r // w, v, s // v, D)
+        return blocks.transpose(0, 2, 1, 3, 4).reshape(w * v, r // w, s // v, D)
+
+    # -- mask derivation (the RNG seam) --------------------------------------
+
+    def _require_key(self, key) -> jax.Array:
+        if key is None:
+            raise ValueError(
+                "secure encode requires a jax.random key (masks must be "
+                "fresh randomness); pass key=... through coded_matmul"
+            )
+        return key
+
+    def masks_a(self, key: jax.Array, tb: int, rb: int) -> jnp.ndarray:
+        """(T, tb, rb, D) uniform mask blocks for the A-side polynomial."""
+        return self.ring.random_jax(jax.random.fold_in(key, 0), (self.T, tb, rb))
+
+    def masks_b(self, key: jax.Array, rb: int, sb: int) -> jnp.ndarray:
+        return self.ring.random_jax(jax.random.fold_in(key, 1), (self.T, rb, sb))
+
+    # -- encode --------------------------------------------------------------
+
+    def encode_a_with_masks(self, A: jnp.ndarray, Z: jnp.ndarray) -> jnp.ndarray:
+        """Encode with explicit mask blocks Z (T, tb, rb, D) -> (N, tb, rb, D).
+
+        The privacy tests enumerate Z exhaustively through this entry point;
+        ``encode_a`` derives Z from a key and delegates here.
+        """
+        blocks = self.split_a(A)
+        K, tb, rb, D = blocks.shape
+        assert Z.shape == (self.T, tb, rb, D), (Z.shape, (self.T, tb, rb, D))
+        coeffs = jnp.concatenate([blocks, Z], axis=0)
+        out = self.ring.matmul(self.Vf, coeffs.reshape(K + self.T, tb * rb, D))
+        return out.reshape(self.N, tb, rb, D)
+
+    def encode_b_with_masks(self, B: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+        blocks = self.split_b(B)
+        K, rb, sb, D = blocks.shape
+        assert W.shape == (self.T, rb, sb, D), (W.shape, (self.T, rb, sb, D))
+        coeffs = jnp.concatenate([blocks, W], axis=0)
+        out = self.ring.matmul(self.Vg, coeffs.reshape(K + self.T, rb * sb, D))
+        return out.reshape(self.N, rb, sb, D)
+
+    def encode_a(self, A: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        key = self._require_key(key)
+        t, r, _ = A.shape
+        return self.encode_a_with_masks(
+            A, self.masks_a(key, t // self.u, r // self.w)
+        )
+
+    def encode_b(self, B: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        key = self._require_key(key)
+        r, s, _ = B.shape
+        return self.encode_b_with_masks(
+            B, self.masks_b(key, r // self.w, s // self.v)
+        )
+
+    def encode_a_at(
+        self, A: jnp.ndarray, i, key: Optional[jax.Array] = None
+    ) -> jnp.ndarray:
+        """Worker i's masked share only; regenerates the same masks from the
+        key that ``encode_a`` uses, so the at-worker codeword is identical."""
+        key = self._require_key(key)
+        blocks = self.split_a(A)
+        K, tb, rb, D = blocks.shape
+        coeffs = jnp.concatenate([blocks, self.masks_a(key, tb, rb)], axis=0)
+        vf = lax.dynamic_index_in_dim(self.Vf, i, axis=0, keepdims=False)
+        out = self.ring.matmul(vf[None], coeffs.reshape(K + self.T, tb * rb, D))[0]
+        return out.reshape(tb, rb, D)
+
+    def encode_b_at(
+        self, B: jnp.ndarray, i, key: Optional[jax.Array] = None
+    ) -> jnp.ndarray:
+        key = self._require_key(key)
+        blocks = self.split_b(B)
+        K, rb, sb, D = blocks.shape
+        coeffs = jnp.concatenate([blocks, self.masks_b(key, rb, sb)], axis=0)
+        vg = lax.dynamic_index_in_dim(self.Vg, i, axis=0, keepdims=False)
+        out = self.ring.matmul(vg[None], coeffs.reshape(K + self.T, rb * sb, D))[0]
+        return out.reshape(rb, sb, D)
+
+    # -- worker / decode ------------------------------------------------------
+
+    def worker_compute(self, FA: jnp.ndarray, GB: jnp.ndarray) -> jnp.ndarray:
+        return vmap(self.ring.matmul)(FA, GB)
+
+    def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """Recover C from ANY R = 2uvw + 2T - 1 responses (idx traceable)."""
+        ring = self.ring
+        R, tb, sb, D = H.shape
+        assert R == self.R, (R, self.R)
+        pts = jnp.take(self.points, idx, axis=0)
+        M = lagrange_coeff_matrix(ring, pts)  # (R, R, D)
+        coeffs = ring.matmul(M, H.reshape(R, tb * sb, D)).reshape(R, tb, sb, D)
+        cblocks = jnp.take(coeffs, jnp.asarray(self.exp_c.ravel()), axis=0)
+        cblocks = cblocks.reshape(self.u, self.v, tb, sb, D)
+        return cblocks.transpose(0, 2, 1, 3, 4).reshape(self.u * tb, self.v * sb, D)
+
+    # -- end to end -----------------------------------------------------------
+
+    def run(
+        self,
+        A: jnp.ndarray,
+        B: jnp.ndarray,
+        key: jax.Array,
+        idx: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        FA, GB = self.encode_a(A, key), self.encode_b(B, key)
+        H = self.worker_compute(FA, GB)
+        if idx is None:
+            idx = jnp.arange(self.R, dtype=jnp.int32)
+        return self.decode(jnp.take(H, idx, axis=0), idx)
+
+    def costs(self, t: int, r: int, s: int, base: Ring, batch: int = 1) -> EPCosts:
+        return ep_cost_model(
+            t, r, s, self.u, self.v, self.w, self.N,
+            m_eff=self.ring.D / base.D, batch=batch, privacy_t=self.T,
+        )
+
+
+class SecureEP:
+    """T-private single-product CDMM over a (possibly tiny) base ring.
+
+    Lemma III.1 layout with masking: the base ring is embedded into the
+    smallest extension with >= N + 1 exceptional points and a
+    :class:`SecureEPCode` runs there.  Masks are uniform over the EXTENSION
+    ring, so shares are uniform extension elements — embedding does not
+    weaken the T-collusion privacy.
+    """
+
+    def __init__(self, base: Ring, N: int, u: int, v: int, w: int, T: int):
+        self.base = base
+        self.ext = smallest_secure_ext(base, N)
+        self.code = SecureEPCode(self.ext, N, u, v, w, T)
+        self.T = T
+
+    @property
+    def R(self) -> int:
+        return self.code.R
+
+    def embed(self, M: jnp.ndarray) -> jnp.ndarray:
+        return self.ext.embed_base(M, self.base)
+
+    def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        # products of embedded data stay in the embedded base ring; the
+        # interference terms never reach the read-out exponents
+        return self.code.decode(H, idx)[..., : self.base.D]
+
+    def run(self, A, B, key, idx=None) -> jnp.ndarray:
+        C = self.code.run(self.embed(A), self.embed(B), key, idx)
+        return C[..., : self.base.D]
+
+    def costs(self, t: int, r: int, s: int) -> EPCosts:
+        return self.code.costs(t, r, s, self.base)
+
+
+class SecureBatchEPRMFE:
+    """T-private coded distributed BATCH matrix multiplication via RMFE.
+
+    A batch of n products over GR(p^e, d) is packed positionwise by an
+    (n, m)-RMFE into one product over the extension (paper Thm III.2) and
+    computed by a :class:`SecureEPCode` there.  The RMFE extension is forced
+    to carry >= N + 1 exceptional points; masks are uniform over the
+    extension, so per-operand T-collusion privacy holds verbatim, while the
+    read-out coefficients stay exactly the packed products (interference
+    lives strictly above them) and psi recovers the batch.
+    """
+
+    def __init__(
+        self, base: Ring, n: int, N: int, u: int, v: int, w: int, T: int
+    ):
+        self.base = base
+        self.n = n
+        self.T = T
+        # the extension must support N + 1 exceptional points (zero skipped)
+        min_m = ceil(log(max(N + 1, 2)) / (log(base.p) * base.D))
+        self.rmfe = build_rmfe(base, n, min_m=min_m)
+        self.ext = self.rmfe.ext
+        if self.ext.p**self.ext.D < N + 1:
+            raise ValueError(
+                f"extension {self.ext} still has < {N + 1} exceptional points"
+            )
+        self.code = SecureEPCode(self.ext, N, u, v, w, T)
+
+    @property
+    def R(self) -> int:
+        return self.code.R
+
+    def pack(self, Ms: jnp.ndarray) -> jnp.ndarray:
+        """(n, a, b, baseD) -> packed (a, b, extD) via phi positionwise."""
+        n, a, b, D = Ms.shape
+        assert n == self.rmfe.n, (n, self.rmfe.n)
+        return self.rmfe.phi(jnp.moveaxis(Ms, 0, 2))
+
+    def unpack(self, C: jnp.ndarray) -> jnp.ndarray:
+        return jnp.moveaxis(self.rmfe.psi(C), 2, 0)
+
+    def decode(self, H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        return self.unpack(self.code.decode(H, idx))
+
+    def run(self, As, Bs, key, idx=None) -> jnp.ndarray:
+        C = self.code.run(self.pack(As), self.pack(Bs), key, idx)
+        return self.unpack(C)
+
+    def costs(self, t: int, r: int, s: int) -> EPCosts:
+        return self.code.costs(t, r, s, self.base, batch=self.rmfe.n)

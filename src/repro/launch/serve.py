@@ -60,7 +60,7 @@ def greedy_generate(
 
 def coded_matmul_demo(
     N: int = 8, fail: int = 3, size: int = 64, seed: int = 0,
-    backend: str = "local",
+    backend: str = "local", privacy_t: int = 0,
 ):
     """The paper's serving integration in one function: the planner picks a
     scheme for the problem spec, and the quantized coded matmul survives
@@ -70,33 +70,46 @@ def coded_matmul_demo(
     ``"local"`` (sync, vmapped) or ``"elastic"`` (event-driven master that
     decodes at the R-th response under a randomized join/slowdown trace —
     the straggler-tolerant serving mode).
+
+    ``privacy_t > 0`` serves T-privately: the planner is restricted to the
+    secure scheme families, encodes carry masked randomness from a fresh
+    jax.random key, and any ``privacy_t`` colluding workers learn nothing
+    about the operands.  (The int8-quantized plane stays insecure — secure
+    serving routes the raw ring matmul.)
     """
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
-        t=size, r=size, s=size, n=1, ring=Z32, N=N, straggler_budget=fail
+        t=size, r=size, s=size, n=1, ring=Z32, N=N, straggler_budget=fail,
+        privacy_t=privacy_t,
     )
-    # the quantized serving plane runs EP_RMFE-I; the planner picks its
-    # partition/packing for the spec (ranked by expected elastic completion
-    # when serving elastically)
+    # the quantized serving plane runs EP_RMFE-I; under a privacy budget the
+    # planner instead searches the secure families (it never silently
+    # downgrades privacy to an insecure scheme)
     objective = "time_to_R" if backend == "elastic" else "latency"
-    p = plan(spec, objective=objective, schemes=["ep_rmfe1"])
+    p = plan(spec, objective=objective,
+             schemes=["ep_rmfe1"] if privacy_t == 0 else None)
     chosen = p.best
-    cm = CodedQuantMatmul(N=N, axis_name=None, n=chosen.n, u=chosen.u,
-                          v=chosen.v, w=chosen.w)
     rng = np.random.default_rng(seed)
-    x = rng.standard_normal((size, size)).astype(np.float32)
-    w = rng.standard_normal((size, size)).astype(np.float32)
     mask = np.ones(N, dtype=bool)
     dead = rng.choice(N, size=fail, replace=False)
     mask[dead] = False
-    y = cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask))
-    y_full = cm(jnp.asarray(x), jnp.asarray(w), mask=None)
-    exact = bool(np.array_equal(np.asarray(y), np.asarray(y_full)))
+
+    exact = True
+    if privacy_t == 0:
+        cm = CodedQuantMatmul(N=N, axis_name=None, n=chosen.n, u=chosen.u,
+                              v=chosen.v, w=chosen.w)
+        x = rng.standard_normal((size, size)).astype(np.float32)
+        w = rng.standard_normal((size, size)).astype(np.float32)
+        y = cm(jnp.asarray(x), jnp.asarray(w), mask=jnp.asarray(mask))
+        y_full = cm(jnp.asarray(x), jnp.asarray(w), mask=None)
+        exact = bool(np.array_equal(np.asarray(y), np.asarray(y_full)))
 
     # the same planned scheme through the pluggable backend plane: the
     # elastic path races a randomized straggler trace and must still match
-    # the sync path bit for bit (integer-exact any-R decode)
+    # the sync path bit for bit (integer-exact any-R decode; secure schemes
+    # decode bit-identically from the same key on every backend)
     scheme = p.instantiate()
+    key = jax.random.PRNGKey(seed) if privacy_t > 0 else None
     A = scheme.base.random(rng, (size, size))
     B = scheme.base.random(rng, (size, size))
     exec_backend = backend
@@ -108,12 +121,14 @@ def coded_matmul_demo(
         ).restrict(mask)
         exec_backend = ElasticBackend(trace=trace)
     C = coded_matmul(A, B, scheme, backend=exec_backend,
-                     mask=None if backend == "elastic" else jnp.asarray(mask))
-    C_sync = coded_matmul(A, B, scheme, backend="local")
+                     mask=None if backend == "elastic" else jnp.asarray(mask),
+                     key=key)
+    C_sync = coded_matmul(A, B, scheme, backend="local", key=key)
     backend_exact = bool(np.array_equal(np.asarray(C), np.asarray(C_sync)))
     return {
         "scheme": chosen.scheme,
         "backend": backend,
+        "privacy_t": privacy_t,
         "partition": (chosen.u, chosen.v, chosen.w, chosen.n),
         "R": chosen.costs.R,
         "dead_workers": sorted(int(d) for d in dead),
@@ -132,14 +147,24 @@ def main():
         help="execution backend for the coded matmul plane (elastic = "
         "event-driven any-R decode, races past stragglers)",
     )
+    ap.add_argument(
+        "--privacy-t", type=int, default=0, metavar="T",
+        help="serve the coded matmul plane T-privately: any T colluding "
+        "workers' shares are statistically independent of the operands "
+        "(restricts the planner to the secure scheme families and raises "
+        "the recovery threshold to 2uvw + 2T - 1)",
+    )
     args = ap.parse_args()
     t0 = time.time()
     out = greedy_generate(args.arch, smoke=args.smoke, gen_len=args.gen_len)
     print(f"generated tokens ({time.time()-t0:.1f}s):\n{out['generated']}")
     if args.coded:
-        demo = coded_matmul_demo(backend=args.coded_backend)
+        demo = coded_matmul_demo(backend=args.coded_backend,
+                                 privacy_t=args.privacy_t)
+        private = (f" T={demo['privacy_t']}-private"
+                   if demo["privacy_t"] else " int8")
         print(
-            f"coded int8 matmul [{demo['scheme']} via {demo['backend']} "
+            f"coded{private} matmul [{demo['scheme']} via {demo['backend']} "
             f"(u,v,w,n)={demo['partition']} "
             f"R={demo['R']}] with dead workers {demo['dead_workers']}: "
             f"bit-identical={demo['bit_identical']}"

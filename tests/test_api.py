@@ -29,6 +29,7 @@ from repro.cdmm import (  # noqa: E402
 Z32 = make_ring(2, 32, ())
 NDEV = len(jax.devices())
 needs8 = pytest.mark.skipif(NDEV < 8, reason=f"needs 8 devices, have {NDEV}")
+KEY = jax.random.PRNGKey(0)  # keyed-encode seam (required by secure schemes)
 
 # one feasible configuration per registered family:
 # (name, spec, (u, v, w), packing n)
@@ -39,6 +40,10 @@ CONFORMANCE_CASES = [
     ("ep_rmfe2", ProblemSpec(8, 8, 8, n=1, ring=Z32, N=8), (2, 2, 1), 2),
     ("batch_ep_rmfe", ProblemSpec(8, 8, 8, n=2, ring=Z32, N=8), (2, 2, 1), 2),
     ("gcsa", ProblemSpec(8, 8, 8, n=2, ring=Z32, N=8), (1, 1, 1), 2),
+    ("ep_secure",
+     ProblemSpec(8, 8, 8, n=1, ring=Z32, N=8, privacy_t=1), (1, 2, 1), 1),
+    ("ep_rmfe_secure",
+     ProblemSpec(8, 8, 8, n=2, ring=Z32, N=8, privacy_t=1), (1, 1, 1), 2),
 ]
 
 
@@ -79,15 +84,17 @@ def test_scheme_conformance_any_R_subset(name, spec, uvw, n):
     A, B = _random_inputs(scheme, spec, rng)
     expect = np.asarray(_reference(scheme, A, B))
 
-    FA, GB = scheme.encode_a(A), scheme.encode_b(B)
+    # the keyed-encode seam: secure schemes consume the key, the rest must
+    # tolerate (and ignore) it
+    FA, GB = scheme.encode_a(A, key=KEY), scheme.encode_b(B, key=KEY)
     assert FA.shape[0] == GB.shape[0] == spec.N
     # encode-at-worker agrees with the master-side encode, share by share
     for i in (0, spec.N - 1):
         np.testing.assert_array_equal(
-            np.asarray(scheme.encode_a_at(A, i)), np.asarray(FA[i])
+            np.asarray(scheme.encode_a_at(A, i, key=KEY)), np.asarray(FA[i])
         )
         np.testing.assert_array_equal(
-            np.asarray(scheme.encode_b_at(B, i)), np.asarray(GB[i])
+            np.asarray(scheme.encode_b_at(B, i, key=KEY)), np.asarray(GB[i])
         )
     H = scheme.worker_compute(FA, GB)
     for trial in range(3):

@@ -1,0 +1,297 @@
+"""Secure (T-private) CDMM: privacy proofs by exhaustive enumeration,
+keyed-encode determinism, and planner privacy edge cases.
+
+The privacy tests are information-theoretic, not statistical: over a small
+ring every possible mask draw is enumerated, so "identically distributed"
+is an exact multiset equality, not a sampling approximation.
+"""
+import itertools
+from collections import Counter
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_ring
+from repro.core.secure import (
+    SecureBatchEPRMFE,
+    SecureEP,
+    SecureEPCode,
+    secure_recovery_threshold,
+    smallest_secure_ext,
+)
+from repro.cdmm import ProblemSpec, coded_matmul, plan
+
+Z32 = make_ring(2, 32, ())
+KEY = jax.random.PRNGKey(0)
+
+
+def _all_elements(ring):
+    """Every element of the ring as a (D,) uint32 coefficient vector."""
+    for coeffs in itertools.product(range(ring.q), repeat=ring.D):
+        yield np.array(coeffs, dtype=np.uint32)
+
+
+def _share_tuple(FA, workers):
+    """Hashable view of the given workers' shares."""
+    return tuple(
+        tuple(int(x) for x in np.asarray(FA[i]).ravel()) for i in workers
+    )
+
+
+def _all_shares(encode, A, mask_iter):
+    """Materialize the (N, ...) share stack for every mask draw."""
+    return [np.asarray(encode(A, jnp.asarray(Z))) for Z in mask_iter]
+
+
+def _distribution(shares, workers):
+    """Exact distribution (Counter) of the named workers' joint shares over
+    an exhaustive mask enumeration."""
+    return Counter(_share_tuple(FA, workers) for FA in shares)
+
+
+# ---------------------------------------------------------------- privacy
+
+
+class TestExhaustivePrivacyT1:
+    """T=1 over GR(2^2, 2) (16 elements, 4 exceptional points): any single
+    worker's share is exactly uniform — independent of the input — while any
+    2 workers' joint shares are input-dependent."""
+
+    ring = make_ring(2, 2, (2,))
+    code = SecureEPCode(ring, N=3, u=1, v=1, w=1, T=1)
+    # two distinct fixed 1x1 inputs
+    A0 = jnp.asarray(np.zeros((1, 1, 2), dtype=np.uint32))
+    A1 = jnp.asarray(np.array([3, 1], dtype=np.uint32).reshape(1, 1, 2))
+
+    def _masks(self):
+        for z in _all_elements(self.ring):
+            yield z.reshape(1, 1, 1, 2)
+
+    @pytest.fixture(scope="class")
+    def a_shares(self):
+        enc = jax.jit(self.code.encode_a_with_masks)
+        return (_all_shares(enc, self.A0, self._masks()),
+                _all_shares(enc, self.A1, self._masks()))
+
+    def test_any_T_workers_learn_nothing(self, a_shares):
+        s0, s1 = a_shares
+        size = self.ring.q**self.ring.D  # 16
+        for i in range(self.code.N):
+            d0 = _distribution(s0, (i,))
+            d1 = _distribution(s1, (i,))
+            # identical distributions for distinct inputs...
+            assert d0 == d1, f"worker {i} can distinguish the inputs"
+            # ...and exactly uniform over the whole ring
+            assert len(d0) == size and set(d0.values()) == {1}
+
+    def test_T_plus_1_workers_do_learn(self, a_shares):
+        s0, s1 = a_shares
+        leaked = []
+        for pair in itertools.combinations(range(self.code.N), 2):
+            leaked.append(_distribution(s0, pair) != _distribution(s1, pair))
+        # every 2-subset distinguishes the inputs (1 mask, 2 equations)
+        assert all(leaked)
+
+    def test_b_side_shares_also_uniform(self):
+        size = self.ring.q**self.ring.D
+        enc = jax.jit(self.code.encode_b_with_masks)
+        s0 = _all_shares(enc, self.A0, self._masks())
+        s1 = _all_shares(enc, self.A1, self._masks())
+        for i in range(self.code.N):
+            d0, d1 = _distribution(s0, (i,)), _distribution(s1, (i,))
+            assert d0 == d1
+            assert len(d0) == size and set(d0.values()) == {1}
+
+
+class TestExhaustivePrivacyT2:
+    """T=2 over GF(8) (8 elements, 8 exceptional points): any 2 workers see
+    an exactly uniform joint distribution; 3 workers distinguish inputs."""
+
+    ring = make_ring(2, 1, (3,))
+    code = SecureEPCode(ring, N=6, u=1, v=1, w=1, T=2)  # R = 5 <= 6
+    A0 = jnp.asarray(np.zeros((1, 1, 3), dtype=np.uint32))
+    A1 = jnp.asarray(np.array([1, 0, 1], dtype=np.uint32).reshape(1, 1, 3))
+
+    def _masks(self):
+        for z0, z1 in itertools.product(_all_elements(self.ring), repeat=2):
+            yield np.stack([z0, z1]).reshape(2, 1, 1, 3)
+
+    @pytest.fixture(scope="class")
+    def a_shares(self):
+        enc = jax.jit(self.code.encode_a_with_masks)
+        return (_all_shares(enc, self.A0, self._masks()),
+                _all_shares(enc, self.A1, self._masks()))
+
+    def test_any_2_workers_uniform(self, a_shares):
+        s0, s1 = a_shares
+        size = (self.ring.q**self.ring.D) ** 2  # 64 joint share values
+        for pair in [(0, 1), (2, 5), (1, 4)]:
+            d0, d1 = _distribution(s0, pair), _distribution(s1, pair)
+            assert d0 == d1, f"workers {pair} can distinguish the inputs"
+            assert len(d0) == size and set(d0.values()) == {1}
+
+    def test_3_workers_leak(self, a_shares):
+        s0, s1 = a_shares
+        trio = (0, 1, 2)
+        assert _distribution(s0, trio) != _distribution(s1, trio)
+
+
+# ------------------------------------------------- construction invariants
+
+
+def test_secure_points_exclude_zero_and_are_units():
+    ring = make_ring(2, 32, (3,))
+    code = SecureEPCode(ring, N=7, u=1, v=1, w=1, T=2)
+    # the zero point would hand its worker an unmasked data block
+    assert not np.any(np.all(code.points_np == 0, axis=1))
+    for pt in code.points_np:
+        assert ring.s_is_unit(pt.astype(object))
+
+
+def test_secure_threshold_and_validation():
+    ring = make_ring(2, 32, (4,))
+    assert secure_recovery_threshold(1, 1, 1, 1) == 3
+    assert secure_recovery_threshold(2, 2, 1, 2) == 11
+    with pytest.raises(ValueError, match="T >= 1"):
+        SecureEPCode(ring, N=8, u=1, v=1, w=1, T=0)
+    with pytest.raises(ValueError, match="> N"):
+        SecureEPCode(ring, N=4, u=2, v=2, w=1, T=1)  # R = 9
+    # N+1 points needed: |T(Z32)| = 2 cannot host N=3 (R = 3 <= N passes)
+    with pytest.raises(ValueError, match="exceptional points"):
+        SecureEPCode(Z32, N=3, u=1, v=1, w=1, T=1)
+
+
+def test_smallest_secure_ext_counts_the_skipped_zero():
+    # 8 workers need 9 points: degree 3 (8 points) is NOT enough
+    ext = smallest_secure_ext(Z32, 8)
+    assert ext.p**ext.D >= 9
+    # 7 workers fit in 8 points
+    assert smallest_secure_ext(Z32, 7).D == 3
+
+
+# ------------------------------------------------- keyed-encode determinism
+
+
+def test_key_determinism_master_vs_at_worker():
+    rng = np.random.default_rng(5)
+    sep = SecureEP(Z32, N=8, u=1, v=2, w=1, T=1)  # R = 2*2 + 2 - 1 = 5
+    A = Z32.random(rng, (4, 4))
+    B = Z32.random(rng, (4, 4))
+    eA = sep.embed(A)
+    eB = sep.embed(B)
+    key = jax.random.PRNGKey(123)
+    FA = sep.code.encode_a(eA, key)
+    GB = sep.code.encode_b(eB, key)
+    for i in range(sep.code.N):
+        np.testing.assert_array_equal(
+            np.asarray(sep.code.encode_a_at(eA, i, key)), np.asarray(FA[i])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sep.code.encode_b_at(eB, i, key)), np.asarray(GB[i])
+        )
+    # a different key produces different shares (masks actually used) ...
+    FA2 = sep.code.encode_a(eA, jax.random.PRNGKey(124))
+    assert not np.array_equal(np.asarray(FA), np.asarray(FA2))
+    # ... yet decodes to the same product
+    C1 = sep.run(A, B, key)
+    C2 = sep.run(A, B, jax.random.PRNGKey(124))
+    np.testing.assert_array_equal(np.asarray(C1), np.asarray(C2))
+    np.testing.assert_array_equal(np.asarray(C1), np.asarray(Z32.matmul(A, B)))
+
+
+def test_secure_requires_key():
+    sep = SecureEP(Z32, N=8, u=1, v=1, w=1, T=1)
+    rng = np.random.default_rng(0)
+    A = Z32.random(rng, (2, 2))
+    with pytest.raises(ValueError, match="key"):
+        sep.code.encode_a(sep.embed(A))
+
+
+def test_secure_batch_any_R_subsets():
+    rng = np.random.default_rng(11)
+    sb = SecureBatchEPRMFE(Z32, n=2, N=8, u=1, v=1, w=1, T=2)  # R = 5
+    As = Z32.random(rng, (2, 4, 4))
+    Bs = Z32.random(rng, (2, 4, 4))
+    expect = [np.asarray(Z32.matmul(As[i], Bs[i])) for i in range(2)]
+    for trial in range(4):
+        idx = jnp.asarray(
+            np.sort(rng.choice(8, size=sb.R, replace=False)), jnp.int32
+        )
+        Cs = sb.run(As, Bs, jax.random.PRNGKey(trial), idx)
+        for i in range(2):
+            np.testing.assert_array_equal(np.asarray(Cs[i]), expect[i])
+
+
+# ------------------------------------------------------- planner edge cases
+
+
+def test_plan_privacy_never_returns_insecure_scheme():
+    for n in (1, 2):
+        spec = ProblemSpec(8, 8, 8, n=n, ring=Z32, N=8, privacy_t=1)
+        p = plan(spec, objective="latency")
+        assert p.candidates, "secure plan must be feasible at N=8"
+        assert all(c.costs.privacy_t >= 1 for c in p.candidates)
+        scheme = p.instantiate()
+        assert scheme.privacy_t >= 1
+
+
+def test_plan_privacy_threshold_accounting():
+    spec = ProblemSpec(8, 8, 8, n=1, ring=Z32, N=16, privacy_t=3)
+    p = plan(spec, objective="threshold")
+    # cheapest secure partition u=v=w=1: R = 2 + 2T - 1 = 7
+    assert p.best.costs.R == 2 * 1 + 2 * 3 - 1
+
+
+def test_plan_privacy_plus_straggler_budget_exhausts_N():
+    # N - budget = 2 < 2T + 1 = 3: caught with a clear error, not an
+    # infeasible plan
+    with pytest.raises(ValueError, match="privacy_t"):
+        plan(ProblemSpec(8, 8, 8, n=1, ring=Z32, N=4,
+                         straggler_budget=2, privacy_t=1))
+    with pytest.raises(ValueError, match="privacy_t"):
+        plan(ProblemSpec(8, 8, 8, n=1, ring=Z32, N=8,
+                         straggler_budget=2, privacy_t=3))
+    # the same budgets without privacy stay feasible
+    plan(ProblemSpec(8, 8, 8, n=1, ring=Z32, N=4, straggler_budget=2))
+
+
+def test_plan_privacy_respects_combined_budgets_when_feasible():
+    spec = ProblemSpec(8, 8, 8, n=1, ring=Z32, N=12,
+                       straggler_budget=4, privacy_t=2)
+    p = plan(spec)
+    assert all(c.costs.R <= 12 - 4 for c in p.candidates)
+    assert all(c.costs.privacy_t >= 2 for c in p.candidates)
+
+
+def test_plan_insecure_schemes_filtered_by_name_restriction():
+    # explicitly requesting only insecure families under a privacy
+    # requirement must fail loudly, not silently downgrade
+    with pytest.raises(ValueError, match="no feasible scheme"):
+        plan(ProblemSpec(8, 8, 8, n=1, ring=Z32, N=8, privacy_t=1),
+             schemes=["ep_rmfe1", "plain"])
+
+
+def test_spec_validates_privacy_t():
+    with pytest.raises(ValueError, match="privacy_t"):
+        ProblemSpec(8, 8, 8, ring=Z32, privacy_t=-1).validate()
+
+
+# ------------------------------------------------------- end-to-end seam
+
+
+def test_coded_matmul_secure_fixed_key_matches_oracle():
+    spec = ProblemSpec(8, 8, 8, n=1, ring=Z32, N=8, privacy_t=1)
+    scheme = plan(spec).instantiate()
+    rng = np.random.default_rng(3)
+    A = Z32.random(rng, (8, 8))
+    B = Z32.random(rng, (8, 8))
+    mask = np.ones(8, bool)
+    mask[[1, 6]] = False
+    C = coded_matmul(A, B, scheme, backend="local",
+                     mask=jnp.asarray(mask), key=KEY)
+    np.testing.assert_array_equal(
+        np.asarray(C), np.asarray(Z32.matmul(A, B))
+    )

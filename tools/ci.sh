@@ -16,12 +16,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" != "--bench-only" ]]; then
   echo "== tier-1 tests =="
+  if [[ "${1:-}" == "--fast" ]]; then
+    # reduced-example hypothesis profile: the property-based conformance
+    # suite (tests/test_conformance.py) stays under the fast-tier budget
+    export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci-fast}"
+  fi
   python -m pytest -x -q
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "== benchmark smoke: Table 1 + straggler/elastic head-to-head =="
-  python -m benchmarks.run --only table1,straggler --json BENCH_ci.json
+  echo "== benchmark smoke: Table 1 + straggler/elastic + secure overhead =="
+  python -m benchmarks.run --only table1,straggler,secure --json BENCH_ci.json
   if [[ -f benchmarks/baseline.json ]]; then
     echo "== benchmark regression gate (>25% vs benchmarks/baseline.json) =="
     # the committed baseline's absolute timings are machine-specific, so the
