@@ -14,9 +14,12 @@ import jax
 import numpy as np
 
 from repro.core import make_ring
-from repro.kernels import gr_matmul, gr_matmul_ref, pick_blocks
+from repro.kernels import cached_blocks, gr_matmul, gr_matmul_ref, pick_blocks
+from repro.kernels.autotune import autotune
 
 from .common import emit, timeit
+
+STATIC_BLOCKS = (128, 128, 128)  # the pre-autotuner hard-coded default
 
 
 def run(full: bool = False):
@@ -46,6 +49,47 @@ def run(full: bool = False):
                 hbm_bytes=hbm_bytes,
                 arith_intensity=round(intops / hbm_bytes, 1),
             )
+    run_tuned(full)
+
+
+def run_tuned(full: bool = False):
+    """Measured tuned-vs-static kernel schedules (the autotuner's payoff).
+
+    Both configurations run the identical kernel body on the executing
+    device (interpret mode on CPU — real wall-clock of the same schedule,
+    compiled Mosaic on TPU); the static 128^3 default pays its padding for
+    real, so the committed tuned cache must match or beat it.  The rows
+    land in BENCH_ci.json and the regression gate, making tuning
+    regressions (a stale cache, a broken candidate filter) visible in the
+    perf trajectory.
+    """
+    rng = np.random.default_rng(7)
+    sizes = [16, 64] if not full else [16, 64, 128]
+    for degs, label in [((), "Z2e32"), ((3,), "GR3")]:
+        ring = make_ring(2, 32, degs)
+        for size in sizes:
+            A = ring.random(rng, (size, size))
+            B = ring.random(rng, (size, size))
+            tuned = cached_blocks(ring, size, size, size)
+            if tuned is None:  # cold cache (new device): tune in-process
+                tuned = autotune(ring, size, size, size, budget=6,
+                                 iters=2).blocks
+            static_call = jax.jit(
+                lambda a, b: gr_matmul(a, b, ring, blocks=STATIC_BLOCKS)
+            )
+            tuned_call = jax.jit(
+                lambda a, b: gr_matmul(a, b, ring, blocks=tuned)
+            )
+            # micro-rows (tens of us in interpret mode) need more samples
+            # for a stable median — these feed the >25% regression gate
+            s_us = timeit(static_call, A, B, iters=7)
+            t_us = timeit(tuned_call, A, B, iters=7)
+            bt, bs, br = tuned
+            emit(f"grmm_kernel_static_{label}_s{size}", s_us,
+                 block="x".join(map(str, STATIC_BLOCKS)))
+            emit(f"grmm_kernel_tuned_{label}_s{size}", t_us,
+                 block=f"{bt}x{bs}x{br}",
+                 speedup_vs_static=round(s_us / t_us, 2))
 
 
 def verify():

@@ -59,12 +59,26 @@ def bench_one(N: int, uvw, sizes, iters: int = 3):
             e_us = timeit(enc, A, B, iters=iters)
             w_us = timeit(worker, FA[:1], GB[:1], iters=iters)
             d_us = timeit(dec, H[: sch.R], iters=iters)
+            # master<->worker transfer proxy: host round-trip of the share
+            # stack (memcpy bandwidth on this box) — the communication term
+            # the calibration fit grounds its upload/download coefficient on
+            comm = jax.jit(lambda fa: fa + jnp.uint32(0))
+            c_us = timeit(lambda fa: np.asarray(comm(fa)), FA, iters=iters)
             c = sch.costs(spec)
+            # every stage row carries its cost-model features + backend tag
+            # so repro.cdmm.calibrate can fit wall-time coefficients from
+            # the emitted JSON (backend="local": stages are the same jitted
+            # calls the LocalSim/ShardMap masters run)
             emit(f"{name}_N{N}_s{size}_encode", e_us,
-                 upload_B=int(c.upload * WORD), m=m)
-            emit(f"{name}_N{N}_s{size}_worker", w_us, m=m)
+                 upload_B=int(c.upload * WORD), m=m,
+                 encode_ops=c.encode_ops, backend="local")
+            emit(f"{name}_N{N}_s{size}_worker", w_us, m=m,
+                 worker_ops=c.worker_ops, backend="local")
             emit(f"{name}_N{N}_s{size}_decode", d_us,
-                 download_B=int(c.download * WORD))
+                 download_B=int(c.download * WORD),
+                 decode_ops=c.decode_ops, backend="local")
+            emit(f"{name}_N{N}_s{size}_comm", c_us,
+                 comm_elems=c.upload + c.download, backend="local")
 
 
 def run(full: bool = False):

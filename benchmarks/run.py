@@ -1,8 +1,10 @@
 """Benchmark entrypoint: one section per paper table/figure.
 
-  figs2-5   bench_single_cdmm  — EP vs EP_RMFE-I/II, N=8/16 (measured)
+  figs2-5   bench_single_cdmm  — EP vs EP_RMFE-I/II, N=8/16 (measured; stage
+                                 rows carry cost features for calibrate.py)
   table1    bench_table1       — GCSA vs Batch-EP_RMFE (analytic + measured CSA)
   kernels   bench_kernels      — gr_matmul ref wall-clock + kernel schedule
+                                 + measured tuned-vs-static block configs
   straggler bench_straggler    — time-to-completion under straggler model
   secure    bench_secure       — T-private threshold/overhead sweep (privacy tax)
 
@@ -11,9 +13,16 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
 (consumed by tools/check_bench.py for regression gating in CI).
 """
 import argparse
+import os
 
 
 def main() -> None:
+    # benchmark rows must measure STABLE configurations: without this,
+    # plan() auto-loads benchmarks/calibration.json and the scheme a row
+    # times would shift whenever the calibration is refit (circularly —
+    # the calibration is fitted from these very rows), breaking row
+    # identity for the regression gate and the rolling history
+    os.environ.setdefault("REPRO_CALIBRATION", "off")
     sections = ("figs", "table1", "kernels", "straggler", "secure")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")

@@ -30,6 +30,13 @@ from .backends import (
     register_backend,
     shard_worker_body,
 )
+from .calibrate import (
+    Calibration,
+    CalibrationSet,
+    fit_rows,
+    load_calibration,
+    save_calibration,
+)
 from .elastic import ElasticBackend, ElasticStream, NotEnoughResponders
 from .planner import OBJECTIVES, Plan, PlanCandidate, expected_time_to_R, plan
 from .runtime import DistributedEP, DistributedBatchRMFE, cdmm_shard_map
@@ -39,6 +46,8 @@ __all__ = [
     "CdmmScheme", "EPCosts", "ProblemSpec", "SchemeFamily",
     "get_scheme", "register_scheme", "registered_schemes",
     "plan", "Plan", "PlanCandidate", "OBJECTIVES", "expected_time_to_R",
+    "Calibration", "CalibrationSet", "fit_rows", "load_calibration",
+    "save_calibration",
     "coded_matmul", "get_backend", "register_backend",
     "LocalSimBackend", "ShardMapBackend", "shard_worker_body",
     "ElasticBackend", "ElasticStream", "NotEnoughResponders",

@@ -45,7 +45,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.straggler import select_workers
-from repro.kernels import gr_matmul, kernel_supported
+from repro.kernels import gr_matmul, kernel_auto_enabled, kernel_supported
 
 from .api import CdmmScheme
 from .planner import Plan
@@ -124,7 +124,7 @@ def shard_worker_body(
     B: jnp.ndarray,
     mask: jnp.ndarray,
     *,
-    use_kernel: bool = False,
+    use_kernel: Optional[bool] = None,
     key: Optional[jax.Array] = None,
 ) -> jnp.ndarray:
     """Per-shard master/worker protocol: call inside shard_map over ``axis``
@@ -134,9 +134,14 @@ def shard_worker_body(
     broadcast-blocks upload model — no shard materialises all N shares),
     computes the local block product (Pallas kernel when supported), then
     all-gathers responses and decodes from the first R live workers.
+    ``use_kernel=None`` auto-enables the kernel whenever it would actually
+    compile for the scheme's ring (``kernel_auto_enabled``); True forces it
+    (interpret mode on CPU), False pins the XLA reference.
     ``key`` (replicated) feeds every shard the SAME mask randomness, so the
     secure codeword polynomial is consistent across workers.
     """
+    if use_kernel is None:
+        use_kernel = kernel_auto_enabled(scheme.ring)
     i = lax.axis_index(axis)
     fa = scheme.encode_a_at(A, i, key=key)
     gb = scheme.encode_b_at(B, i, key=key)
@@ -158,8 +163,10 @@ class ShardMapBackend:
         self,
         mesh: Optional[Mesh] = None,
         axis: str = "workers",
-        use_kernel: bool = False,
+        use_kernel: Optional[bool] = None,
     ):
+        # None = auto: tuned Pallas kernel wherever it compiles for the
+        # scheme's ring (see shard_worker_body)
         self.mesh, self.axis, self.use_kernel = mesh, axis, use_kernel
 
     def _mesh_for(self, N: int) -> Mesh:
@@ -249,4 +256,10 @@ def coded_matmul(
     every backend; privacy requires a fresh key per call.
     """
     scheme = plan.instantiate() if isinstance(plan, Plan) else plan
-    return get_backend(backend)(scheme, A, B, mask, key=key)
+    be = get_backend(backend)
+    if key is None:
+        # keep the pre-keyed-encode 4-argument backend protocol working:
+        # externally registered backends that never learned ``key=`` still
+        # serve every non-secure call
+        return be(scheme, A, B, mask)
+    return be(scheme, A, B, mask, key=key)

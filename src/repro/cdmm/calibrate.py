@@ -1,0 +1,299 @@
+"""Planner calibration: fit measured wall-time coefficients per backend.
+
+The planner's ``"latency"`` objective was an op-count proxy — fine for
+ordering schemes with wildly different asymptotics, blind to the machine
+constants that decide real races (XLA's uint32 matmul throughput vs the
+Vandermonde encode's, memcpy bandwidth for share movement...).  This module
+closes the loop: :func:`fit_rows` ingests the machine-readable rows
+``benchmarks/run.py --json`` emits (stage rows tagged with their cost-model
+features — ``encode_ops``/``worker_ops``/``decode_ops``/``comm_elems`` — and
+a ``backend`` name), fits one linear coefficient per term by least squares
+through the origin, and :func:`save_calibration` persists the result to a
+committed ``benchmarks/calibration.json``.  ``plan(spec, objective=
+"latency")`` then scores candidates by *predicted wall time*
+
+    t_us = c_enc * encode_ops + c_comp * worker_ops
+         + c_dec * decode_ops + c_comm * (upload + download)
+
+falling back to the analytic op-count proxy whenever no calibration is
+available (missing file, unknown backend, or ``REPRO_CALIBRATION=off``).
+``"time_to_R"`` keeps the straggler order-statistic as its leading term and
+swaps its log-compressed tie-break for the calibrated serial master work.
+
+Regenerate after hardware or kernel changes:
+
+    python -m benchmarks.run --only figs --json BENCH_ci.json
+    python -m repro.cdmm.calibrate --bench BENCH_ci.json \
+        --out benchmarks/calibration.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.ep_codes import EPCosts
+
+__all__ = [
+    "Calibration",
+    "CalibrationSet",
+    "DEFAULT_CALIBRATION_PATH",
+    "fit_rows",
+    "load_calibration",
+    "save_calibration",
+]
+
+# committed next to the benchmark baselines; resolved relative to the repo
+# checkout (src/repro/cdmm -> repo root), overridable via REPRO_CALIBRATION
+DEFAULT_CALIBRATION_PATH = (
+    Path(__file__).resolve().parents[3] / "benchmarks" / "calibration.json"
+)
+CALIBRATION_VERSION = 1
+
+# stage-row suffix -> (feature key in the row's derived dict, coef name)
+STAGE_FEATURES: Dict[str, Tuple[str, str]] = {
+    "encode": ("encode_ops", "encode"),
+    "worker": ("worker_ops", "compute"),
+    "decode": ("decode_ops", "decode"),
+    "comm": ("comm_elems", "comm"),
+}
+COEF_NAMES = ("encode", "compute", "decode", "comm")
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Fitted us-per-unit coefficients for one backend.
+
+    ``coef[name]`` multiplies the matching EPCosts term; a term never
+    observed in the fit keeps coefficient 0.0 (it then contributes nothing
+    to predictions — the analytic fallback still covers pure-proxy use).
+    """
+
+    backend: str
+    coef: Dict[str, float]
+    nrows: int = 0
+    r2: Dict[str, float] = field(default_factory=dict)
+
+    def predict_us(self, costs: EPCosts) -> float:
+        """Predicted serial wall time (us) of one coded execution."""
+        c = self.coef
+        return (
+            c.get("encode", 0.0) * costs.encode_ops
+            + c.get("compute", 0.0) * costs.worker_ops
+            + c.get("decode", 0.0) * costs.decode_ops
+            + c.get("comm", 0.0) * (costs.upload + costs.download)
+        )
+
+    def serial_master_us(self, costs: EPCosts) -> float:
+        """Master-side serial work only (encode + decode + communication):
+        the piece an elastic master cannot overlap with worker compute."""
+        c = self.coef
+        return (
+            c.get("encode", 0.0) * costs.encode_ops
+            + c.get("decode", 0.0) * costs.decode_ops
+            + c.get("comm", 0.0) * (costs.upload + costs.download)
+        )
+
+
+@dataclass(frozen=True)
+class CalibrationSet:
+    """Per-backend calibrations with a fallback chain: exact backend name,
+    then "local" (stage timings are the same jitted calls everywhere),
+    then None (caller reverts to the analytic proxy).
+
+    ``device`` namespaces the fit by the hardware it was measured on
+    (``jax.default_backend()`` at fit time): coefficients from one
+    machine's CPU must not silently rank plans on a TPU host.  ``None``
+    means device-agnostic — hand-built sets (tests, explicit overrides)
+    apply anywhere.
+    """
+
+    backends: Dict[str, Calibration]
+    device: Optional[str] = None
+
+    def for_backend(self, backend: str = "local") -> Optional[Calibration]:
+        cal = self.backends.get(backend)
+        if cal is None:
+            cal = self.backends.get("local")
+        return cal
+
+    def matches_device(self) -> bool:
+        """Do these coefficients describe the executing hardware?"""
+        if self.device is None:
+            return True
+        import jax  # deferred: keep module importable without jax init
+
+        return self.device == jax.default_backend()
+
+    def to_payload(self) -> dict:
+        return {
+            "version": CALIBRATION_VERSION,
+            "device": self.device,
+            "backends": {
+                name: {"coef": cal.coef, "nrows": cal.nrows, "r2": cal.r2}
+                for name, cal in sorted(self.backends.items())
+            },
+        }
+
+    @classmethod
+    def from_payload(cls, payload: Mapping) -> "CalibrationSet":
+        if payload.get("version") != CALIBRATION_VERSION:
+            raise ValueError(
+                f"calibration version {payload.get('version')!r} != "
+                f"{CALIBRATION_VERSION}"
+            )
+        backends = {}
+        for name, entry in payload.get("backends", {}).items():
+            coef = {k: float(v) for k, v in entry["coef"].items()}
+            bad = set(coef) - set(COEF_NAMES)
+            if bad:
+                raise ValueError(f"unknown coefficient(s) {sorted(bad)}")
+            backends[name] = Calibration(
+                backend=name,
+                coef=coef,
+                nrows=int(entry.get("nrows", 0)),
+                r2={k: float(v) for k, v in entry.get("r2", {}).items()},
+            )
+        return cls(backends=backends, device=payload.get("device"))
+
+
+def _stage_of(name: str) -> Optional[str]:
+    tail = name.rsplit("_", 1)[-1]
+    return tail if tail in STAGE_FEATURES else None
+
+
+def fit_rows(rows: Iterable[Mapping]) -> CalibrationSet:
+    """Fit per-backend coefficients from benchmark JSON rows.
+
+    A row participates when it is timed (``us > 0``), its name ends in a
+    known stage suffix, and its ``derived`` dict carries that stage's
+    feature and a ``backend`` tag.  Each coefficient is the least-squares
+    slope through the origin, ``sum(us * x) / sum(x^2)`` — one observation
+    per (backend, stage) would make an exact fit; more average out noise.
+    """
+    # (backend, coef_name) -> [(feature, us)]
+    samples: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
+    nrows: Dict[str, int] = {}
+    for row in rows:
+        us = float(row.get("us", 0.0))
+        stage = _stage_of(str(row.get("name", "")))
+        if us <= 0.0 or stage is None:
+            continue
+        derived = row.get("derived", {})
+        feature_key, coef_name = STAGE_FEATURES[stage]
+        if feature_key not in derived:
+            continue
+        x = float(derived[feature_key])
+        if x <= 0.0:
+            continue
+        backend = str(derived.get("backend", "local"))
+        samples.setdefault((backend, coef_name), []).append((x, us))
+        nrows[backend] = nrows.get(backend, 0) + 1
+
+    backends: Dict[str, Calibration] = {}
+    for backend in sorted(nrows):
+        coef: Dict[str, float] = {}
+        r2: Dict[str, float] = {}
+        for name in COEF_NAMES:
+            pts = samples.get((backend, name), [])
+            if not pts:
+                continue
+            sxx = sum(x * x for x, _ in pts)
+            sxy = sum(x * y for x, y in pts)
+            c = max(sxy / sxx, 0.0) if sxx > 0 else 0.0
+            coef[name] = c
+            sy = sum(y for _, y in pts) / len(pts)
+            ss_res = sum((y - c * x) ** 2 for x, y in pts)
+            ss_tot = sum((y - sy) ** 2 for _, y in pts)
+            r2[name] = round(1.0 - ss_res / ss_tot, 4) if ss_tot > 0 else 1.0
+        backends[backend] = Calibration(
+            backend=backend, coef=coef, nrows=nrows[backend], r2=r2
+        )
+    try:
+        import jax
+
+        device = jax.default_backend()
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        device = None
+    return CalibrationSet(backends=backends, device=device)
+
+
+def save_calibration(
+    cal: CalibrationSet, path: Optional[Path] = None
+) -> Path:
+    p = Path(path) if path else DEFAULT_CALIBRATION_PATH
+    with open(p, "w") as f:
+        json.dump(cal.to_payload(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return p
+
+
+_LOADED: Dict[str, Optional[CalibrationSet]] = {}
+
+
+def load_calibration(
+    path: Optional[Path] = None, *, cache: bool = True
+) -> Optional[CalibrationSet]:
+    """Load the committed calibration, or None when unavailable.
+
+    Resolution order: explicit ``path`` argument, the ``REPRO_CALIBRATION``
+    env var (the value ``off``/``0``/empty disables calibration entirely —
+    the deterministic analytic proxy for tests), then the committed
+    ``benchmarks/calibration.json``.  Parsed files are memoized per path.
+    """
+    if path is None:
+        env = os.environ.get("REPRO_CALIBRATION")
+        if env is not None:
+            if env.strip().lower() in ("", "0", "off", "none"):
+                return None
+            path = Path(env)
+        else:
+            path = DEFAULT_CALIBRATION_PATH
+    key = str(path)
+    if cache and key in _LOADED:
+        return _LOADED[key]
+    result: Optional[CalibrationSet] = None
+    try:
+        with open(path) as f:
+            result = CalibrationSet.from_payload(json.load(f))
+    except (OSError, ValueError, json.JSONDecodeError):
+        result = None  # analytic fallback — never fail a plan() over this
+    if cache:
+        _LOADED[key] = result
+    return result
+
+
+def invalidate_calibration_cache() -> None:
+    _LOADED.clear()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench", default="BENCH_ci.json",
+        help="benchmark rows JSON (from benchmarks/run.py --json)",
+    )
+    ap.add_argument(
+        "--out", default=str(DEFAULT_CALIBRATION_PATH),
+        help="calibration JSON to write",
+    )
+    args = ap.parse_args(argv)
+    with open(args.bench) as f:
+        rows = json.load(f)
+    cal = fit_rows(rows)
+    if not cal.backends:
+        print(f"no calibratable rows in {args.bench} (need timed stage rows "
+              f"with cost features; run benchmarks/run.py --only figs --json)")
+        return 1
+    out = save_calibration(cal, Path(args.out))
+    for name, c in sorted(cal.backends.items()):
+        print(f"{name}: {c.coef} (n={c.nrows}, r2={c.r2})")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.galois import Ring
 from repro.core.straggler import WorkerTrace
+from repro.kernels import gr_matmul, kernel_auto_enabled, kernel_supported
 from repro.runtime.elastic import replan_batch
 
 from .api import CdmmScheme, ProblemSpec
@@ -82,13 +83,22 @@ def _response_order(resp_ms: np.ndarray) -> np.ndarray:
     return np.lexsort((np.arange(len(resp_ms)), resp_ms))
 
 
-def _worker_closures(scheme: CdmmScheme, keyed: bool = False):
+def _worker_closures(
+    scheme: CdmmScheme, keyed: bool = False, use_kernel: Optional[bool] = None
+):
     """Jitted (encode_at, compute) closures, cached per scheme instance so
     repeated elastic calls never re-trace.  The worker id is a traced scalar
     (one compilation covers all N workers); worker shares are donated to the
     compute (single-use buffers; donation is a warn-only no-op on CPU).
     ``keyed`` selects the keyed-encode variant (the masked-randomness seam:
-    the PRNG key is a traced argument so rekeying never re-compiles)."""
+    the PRNG key is a traced argument so rekeying never re-compiles).
+    ``use_kernel`` (None = auto via ``kernel_auto_enabled``) routes each
+    worker's block product through the tuned Pallas kernel — every
+    registered scheme's ``worker_compute`` is exactly the ring matmul of
+    its two shares, so the substitution is scheme-agnostic and exact."""
+    if use_kernel is None:
+        use_kernel = kernel_auto_enabled(scheme.ring)
+    use_kernel = use_kernel and kernel_supported(scheme.ring)
     ops = scheme.__dict__.setdefault("_elastic_ops", {})
     ename = "encode_keyed" if keyed else "encode"
     if ename not in ops:
@@ -101,12 +111,19 @@ def _worker_closures(scheme: CdmmScheme, keyed: bool = False):
             ops[ename] = jax.jit(lambda a, b, i: (
                 scheme.encode_a_at(a, i), scheme.encode_b_at(b, i)
             ))
-    if "compute" not in ops:
-        ops["compute"] = jax.jit(
-            lambda fa, gb: scheme.worker_compute(fa[None], gb[None])[0],
+    cname = "compute_kernel" if use_kernel else "compute"
+    if cname not in ops:
+        if use_kernel:
+            body = lambda fa, gb: gr_matmul(fa, gb, scheme.ring)  # noqa: E731
+        else:
+            body = lambda fa, gb: (  # noqa: E731
+                scheme.worker_compute(fa[None], gb[None])[0]
+            )
+        ops[cname] = jax.jit(
+            body,
             donate_argnums=() if jax.default_backend() == "cpu" else (0, 1),
         )
-    return ops[ename], ops["compute"]
+    return ops[ename], ops[cname]
 
 
 class ElasticBackend:
@@ -127,10 +144,14 @@ class ElasticBackend:
         trace: Optional[WorkerTrace] = None,
         max_threads: Optional[int] = None,
         simulate_ms_scale: float = 0.0,
+        use_kernel: Optional[bool] = None,
     ):
         self.trace = trace
         self.max_threads = max_threads
         self.simulate_ms_scale = simulate_ms_scale
+        # None = auto: workers use the tuned Pallas kernel wherever it
+        # compiles for the scheme's ring (see _worker_closures)
+        self.use_kernel = use_kernel
         self.last_stats: Optional[ElasticStats] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_size = 0
@@ -241,7 +262,9 @@ class ElasticBackend:
         dispatch = [i for i in np.argsort(trace.join_ms, kind="stable")
                     if trace.join_ms[i] <= t_R]
 
-        encode_at, compute = _worker_closures(scheme, keyed=key is not None)
+        encode_at, compute = _worker_closures(
+            scheme, keyed=key is not None, use_kernel=self.use_kernel
+        )
 
         q: "queue.Queue" = queue.Queue()
         scale = self.simulate_ms_scale

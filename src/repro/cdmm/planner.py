@@ -15,26 +15,47 @@ Objectives:
   * ``"download"``  — minimize master download volume (Table 1's headline:
     Batch-EP_RMFE beats GCSA by ~1/n here),
   * ``"upload"``    — minimize master upload volume,
-  * ``"latency"``   — minimize a serial-path proxy
+  * ``"latency"``   — minimize predicted wall time.  With a fitted
+    calibration (``repro.cdmm.calibrate``; the committed
+    ``benchmarks/calibration.json`` loads automatically) the score is
+    measured us-per-op coefficients times the cost-model terms; without
+    one it falls back to the historical op-count proxy
     (encode + worker + decode ops + upload + download elements),
   * ``"time_to_R"`` — minimize expected completion under the straggler
     latency model (``core.straggler.straggler_latencies``): the elastic
     backend finishes at the R-th fastest response, so the score is the
     Monte-Carlo mean of the R-th order statistic of N heavy-tailed worker
-    latencies, with the serial-work proxy as an epsilon tie-break.
+    latencies, with a log-compressed serial-work epsilon tie-break —
+    grounded in the calibrated serial master work (encode + decode +
+    communication, measured us) when a calibration is loaded, in raw op
+    counts otherwise.  The order statistic stays the leading term either
+    way: the synthetic straggler clock and the measured machine clock are
+    different axes, so the measured term never outvotes resilience.
+
+``plan(..., calibration=...)`` pins an explicit
+:class:`~repro.cdmm.calibrate.CalibrationSet` (or ``False`` to force the
+analytic proxy); ``backend`` names which backend's coefficients score the
+candidates.  Set ``REPRO_CALIBRATION=off`` to disable auto-loading
+globally (deterministic CI tiers).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import lru_cache
 from math import log1p
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.ep_codes import EPCosts
 
 from .api import CdmmScheme, ProblemSpec, get_scheme, registered_schemes
+from .calibrate import (
+    COEF_NAMES,
+    Calibration,
+    CalibrationSet,
+    load_calibration,
+)
 
 __all__ = ["plan", "Plan", "PlanCandidate", "OBJECTIVES", "expected_time_to_R"]
 
@@ -78,6 +99,32 @@ OBJECTIVES: Dict[str, callable] = {
         + 1e-6 * log1p(c.encode_ops + c.decode_ops + c.upload + c.download)
     ),
 }
+
+# objectives whose analytic form is replaced by measured coefficients when a
+# calibration is available (the rest are pure counts — already exact)
+_CALIBRATED_OBJECTIVES = ("latency", "time_to_R")
+
+
+def _calibrated_score_fn(objective: str, cal: Calibration):
+    """Measured-wall-time score for one objective, or None to keep the
+    analytic proxy (calibration carries no useful coefficients)."""
+    if not cal.coef:
+        return None
+    if objective == "latency":
+        return cal.predict_us
+    if objective == "time_to_R":
+        # E[t_R] is in *model*-ms (synthetic straggler scale), the fitted
+        # serial master work in machine-us — different clocks, so the
+        # measured term must stay a tie-break (log-compressed like the
+        # analytic one) or big problems would drown the order statistic
+        # and the objective would stop rewarding straggler resilience.
+        # Calibration still improves the tie-break: encode/decode/comm are
+        # weighed by measured us instead of raw op counts.
+        return lambda c: (
+            expected_time_to_R(c.N, c.R)
+            + 1e-6 * log1p(cal.serial_master_us(c))
+        )
+    return None
 
 
 @dataclass(frozen=True)
@@ -165,6 +212,8 @@ def plan(
     objective: str = "latency",
     schemes: Optional[Sequence[str]] = None,
     top_k: Optional[int] = None,
+    calibration: Union[None, bool, CalibrationSet] = None,
+    backend: str = "local",
 ) -> Plan:
     """Rank every feasible (scheme, u, v, w, n) configuration for ``spec``.
 
@@ -173,6 +222,15 @@ def plan(
     returned ranking (default: keep every feasible candidate, so losing
     schemes remain inspectable via ``Plan.by_scheme``).  Raises
     ``ValueError`` when no configuration satisfies R <= N - straggler_budget.
+
+    ``calibration`` grounds the ``"latency"`` / ``"time_to_R"`` scores in
+    measured wall-time coefficients: ``None`` auto-loads the committed
+    ``benchmarks/calibration.json`` (no-op when absent or disabled via
+    ``REPRO_CALIBRATION=off``), ``False`` forces the analytic proxy, and an
+    explicit :class:`~repro.cdmm.calibrate.CalibrationSet` pins the
+    coefficients (what the ranking-flip tests use).  ``backend`` selects
+    whose coefficients apply ("local" timings are the fallback for
+    backends without their own fit).
 
     When ``spec.privacy_t > 0`` only configurations whose cost model
     advertises ``privacy_t >= spec.privacy_t`` are feasible — i.e. only the
@@ -187,6 +245,21 @@ def plan(
             f"unknown objective {objective!r}; one of {sorted(OBJECTIVES)}"
         )
     score_fn = OBJECTIVES[objective]
+    if objective in _CALIBRATED_OBJECTIVES and calibration is not False:
+        pinned = isinstance(calibration, CalibrationSet)
+        cal_set = calibration if pinned else load_calibration()
+        cal = cal_set.for_backend(backend) if cal_set is not None else None
+        if cal is not None and not pinned:
+            # auto-loaded files are held to a higher bar than an explicitly
+            # pinned set: the coefficients must describe this hardware and
+            # cover every cost term — a partial fit would silently score
+            # the missing term (e.g. communication) as free
+            if not cal_set.matches_device() or set(cal.coef) != set(
+                COEF_NAMES
+            ):
+                cal = None
+        if cal is not None:
+            score_fn = _calibrated_score_fn(objective, cal) or score_fn
 
     requested = registered_schemes()
     if schemes is not None:

@@ -51,7 +51,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax, vmap
 
-from .ep_codes import EPCosts, ep_cost_model, secure_recovery_threshold
+from .ep_codes import (
+    EPCosts,
+    ep_cost_model,
+    secure_recovery_threshold,
+    smallest_embedding_ext,
+)
 from .galois import Ring
 from .polyops import as_u32, lagrange_coeff_matrix, s_vandermonde
 from .rmfe import build_rmfe
@@ -68,15 +73,11 @@ __all__ = [
 def smallest_secure_ext(base: Ring, N: int) -> Ring:
     """Smallest extension of ``base`` whose exceptional set supports N
     *secure* evaluation points, i.e. >= N + 1 digit-lift points (the zero
-    point is skipped — it is not a unit and would leak an unmasked share)."""
-    m = 1
-    while base.p ** (base.D * m) < N + 1:
-        m += 1
-    ext = base.extend(m) if m > 1 else base
-    while ext.p**ext.D < N + 1:
-        m += 1
-        ext = base.extend(m)
-    return ext
+    point is skipped — it is not a unit and would leak an unmasked share).
+
+    Delegates to ``smallest_embedding_ext`` so the search stays in lockstep
+    with its analytic mirror ``repro.cdmm.api._embed_ext_D``."""
+    return smallest_embedding_ext(base, N + 1)
 
 
 class SecureEPCode:

@@ -1,0 +1,402 @@
+"""Kernel autotuner: measured (bt, bs, br) block sizes for gr_matmul_planar.
+
+The CDMM hot loop ran with a static 128^3 block default; the right block
+shape depends on the ring (D controls the unrolled dot count, K the VMEM
+accumulator footprint), the problem tile and the device.  This module
+searches a *divisor-aware* candidate grid per
+``(device, ring.D, ring.K, T, S, R)`` point, times each candidate through
+the benchmark harness's median-wall-clock helper, and persists the winner
+to a committed JSON cache (``autotune_cache.json`` next to this file) with
+an in-process LRU on top.  ``ops.gr_matmul`` consults the cache whenever the
+caller does not pin ``blocks`` explicitly, so every backend (local,
+shard_map, elastic) inherits tuned schedules transparently.
+
+CLI (the CI ``autotune-smoke`` job runs this in a bounded ``--budget``
+mode and verifies the committed cache still covers the tier-1 points):
+
+    python -m repro.kernels.autotune --budget 6            # retune DEFAULT_POINTS
+    python -m repro.kernels.autotune --check               # validate committed cache
+    python -m repro.kernels.autotune --out /tmp/cache.json # write elsewhere
+
+Determinism: candidate enumeration is a pure function of the key (sorted,
+no RNG), so two runs disagree only through timing noise; the cache keeps
+the measured us alongside the winner for later inspection.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.galois import Ring, make_ring
+
+from .gr_matmul import MAX_D, _round_up, gr_matmul_planar
+
+__all__ = [
+    "CACHE_PATH",
+    "DEFAULT_POINTS",
+    "TuneResult",
+    "autotune",
+    "cached_blocks",
+    "candidate_blocks",
+    "load_cache",
+    "save_cache",
+    "tune_key",
+]
+
+CACHE_PATH = Path(__file__).with_name("autotune_cache.json")
+CACHE_VERSION = 1
+
+# MXU-aligned block sizes the search draws from; the (8-aligned) dim itself
+# is always added so small tiles get a single-block schedule
+BLOCK_SIZES = (8, 16, 32, 64, 128, 256)
+VMEM_BUDGET_BYTES = 12 * 2**20  # leave headroom under the ~16 MiB/core VMEM
+MAX_INTERPRET_GRID = 64  # interpret mode pays python per grid step; cap it
+
+_LRU_SIZE = 256
+_LRU: "OrderedDict[str, Tuple[int, int, int]]" = OrderedDict()
+_DISK: Optional[Dict[str, dict]] = None  # lazily-loaded committed cache
+
+
+def device_kind() -> str:
+    """Cache namespace for the executing device ("cpu" implies interpret
+    mode — the kernel only compiles on TPU)."""
+    import jax
+
+    return jax.default_backend()
+
+
+def tune_key(
+    ring: Ring, t: int, r: int, s: int, device: Optional[str] = None
+) -> str:
+    """Canonical cache key: device | ring envelope | 8-aligned planar dims.
+
+    Dims are rounded up to the minimal (sublane) alignment so every ragged
+    shape inside one envelope shares a tuned entry; ``ops.gr_matmul`` then
+    pads to the chosen block multiples exactly as before.
+    """
+    dev = device or device_kind()
+    T, R, S = _round_up(t, 8), _round_up(r, 8), _round_up(s, 8)
+    return f"{dev}|D{ring.D}K{ring.K}e{ring.e}|{T}x{R}x{S}"
+
+
+def _vmem_words(D: int, K: int, bt: int, bs: int, br: int) -> int:
+    return (bt * br + br * bs + bt * bs) * D + K * bt * bs
+
+
+def _dim_candidates(d: int) -> List[int]:
+    """Block choices for one (8-aligned) dim: divisors of the dim drawn
+    from the MXU-aligned sizes first (zero padding waste), then the
+    non-divisor sizes below the dim, then the dim itself."""
+    dp = _round_up(d, 8)
+    divisors = [b for b in BLOCK_SIZES if b <= dp and dp % b == 0]
+    rest = [b for b in BLOCK_SIZES if b <= dp and dp % b != 0]
+    out = divisors + rest
+    if dp not in out:
+        out.append(dp)
+    return out
+
+
+def candidate_blocks(
+    ring: Ring, t: int, r: int, s: int
+) -> List[Tuple[int, int, int]]:
+    """Deterministic candidate (bt, bs, br) grid for one tuning point.
+
+    Divisor-aware: per-dim choices that divide the 8-aligned dim come
+    first; the cross product is filtered by the VMEM accumulator budget
+    (the K conv planes dominate for towers) and ordered by (padding waste,
+    larger blocks first) so a bounded ``--budget`` prefix still explores
+    the schedules most likely to win.  The static 128^3 default is always
+    a member when it fits, so a tuned entry can only match or beat it.
+    """
+    D, K = ring.D, ring.K
+    tp, rp, sp = _round_up(t, 8), _round_up(r, 8), _round_up(s, 8)
+    seen = set()
+    cands: List[Tuple[int, int, int]] = []
+    for bt in _dim_candidates(tp):
+        for bs in _dim_candidates(sp):
+            for br in _dim_candidates(rp):
+                blocks = (bt, bs, br)
+                if blocks in seen:
+                    continue
+                seen.add(blocks)
+                if _vmem_words(D, K, bt, bs, br) * 4 > VMEM_BUDGET_BYTES:
+                    continue
+                cands.append(blocks)
+
+    def waste(blocks: Tuple[int, int, int]) -> float:
+        bt, bs, br = blocks
+        padded = _round_up(tp, bt) * _round_up(rp, br) * _round_up(sp, bs)
+        return padded / (tp * rp * sp)
+
+    cands.sort(key=lambda b: (waste(b), -(b[0] * b[1] * b[2]), b))
+    return cands
+
+
+def _grid_steps(t: int, r: int, s: int, blocks: Tuple[int, int, int]) -> int:
+    bt, bs, br = blocks
+    return (
+        (_round_up(t, bt) // bt)
+        * (_round_up(s, bs) // bs)
+        * (_round_up(r, br) // br)
+    )
+
+
+def _median_us(fn, *args, iters: int = 3) -> float:
+    """Median wall-clock (us); delegates to the benchmark harness's timeit
+    when the ``benchmarks`` package is importable (repo checkouts), with a
+    faithful local mirror for installed-package use."""
+    try:
+        from benchmarks.common import timeit
+
+        return timeit(fn, *args, iters=iters)
+    except ImportError:
+        import jax
+
+        jax.block_until_ready(fn(*args))  # warmup / compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    key: str
+    blocks: Tuple[int, int, int]
+    us: float
+    tried: int  # candidates actually timed under the budget
+
+
+def load_cache(path: Optional[Path] = None) -> Dict[str, dict]:
+    """Deserialize the persisted cache ({key: {blocks, us, tried}})."""
+    p = Path(path) if path else CACHE_PATH
+    if not p.exists():
+        return {}
+    with open(p) as f:
+        payload = json.load(f)
+    if payload.get("version") != CACHE_VERSION:
+        return {}
+    entries = payload.get("entries", {})
+    for key, e in entries.items():
+        blocks = e.get("blocks")
+        if (
+            not isinstance(blocks, list)
+            or len(blocks) != 3
+            or not all(isinstance(b, int) and b > 0 for b in blocks)
+        ):
+            raise ValueError(f"autotune cache entry {key!r} is malformed: {e}")
+    return entries
+
+
+def save_cache(entries: Dict[str, dict], path: Optional[Path] = None) -> Path:
+    p = Path(path) if path else CACHE_PATH
+    with open(p, "w") as f:
+        json.dump(
+            {"version": CACHE_VERSION, "entries": entries},
+            f, indent=1, sort_keys=True,
+        )
+        f.write("\n")
+    return p
+
+
+def _disk_cache() -> Dict[str, dict]:
+    global _DISK
+    if _DISK is None:
+        try:
+            _DISK = load_cache()
+        except (ValueError, json.JSONDecodeError):  # corrupt cache: ignore,
+            _DISK = {}  # the static default is always safe
+    return _DISK
+
+
+def invalidate_memory_cache() -> None:
+    """Drop the in-process views (tests, or after rewriting the JSON)."""
+    global _DISK
+    _DISK = None
+    _LRU.clear()
+
+
+def cached_blocks(
+    ring: Ring, t: int, r: int, s: int, device: Optional[str] = None
+) -> Optional[Tuple[int, int, int]]:
+    """Tuned blocks for this point, or None (caller falls back to the
+    static heuristic).  LRU over the deserialized committed cache — the
+    hot path never re-reads JSON."""
+    key = tune_key(ring, t, r, s, device)
+    hit = _LRU.get(key)
+    if hit is not None:
+        _LRU.move_to_end(key)
+        return hit
+    entry = _disk_cache().get(key)
+    if entry is None:
+        return None
+    blocks = tuple(int(b) for b in entry["blocks"])
+    while len(_LRU) >= _LRU_SIZE:
+        _LRU.popitem(last=False)
+    _LRU[key] = blocks
+    return blocks
+
+
+def autotune(
+    ring: Ring,
+    t: int,
+    r: int,
+    s: int,
+    *,
+    budget: Optional[int] = None,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+    device: Optional[str] = None,
+    persist: bool = False,
+    path: Optional[Path] = None,
+) -> TuneResult:
+    """Time the candidate grid at one point and record the winner.
+
+    ``budget`` caps how many candidates are timed (the deterministic
+    ordering makes a small budget meaningful); ``persist`` writes the
+    updated cache JSON back to disk (default: in-process only).
+    """
+    import jax
+
+    if ring.p != 2 or ring.e > 32 or ring.D > MAX_D:
+        raise ValueError(f"{ring} is outside the kernel envelope")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    key = tune_key(ring, t, r, s, device)
+    cands = candidate_blocks(ring, t, r, s)
+    if interpret:
+        cands = [
+            b for b in cands if _grid_steps(t, r, s, b) <= MAX_INTERPRET_GRID
+        ]
+    if budget is not None:
+        cands = cands[: max(1, budget)]
+
+    rng = np.random.default_rng(0)
+    D = ring.D
+    tp, rp, sp = _round_up(t, 8), _round_up(r, 8), _round_up(s, 8)
+    A = rng.integers(0, 2**16, size=(D, tp, rp), dtype=np.uint32)
+    B = rng.integers(0, 2**16, size=(D, rp, sp), dtype=np.uint32)
+
+    best: Optional[Tuple[float, Tuple[int, int, int]]] = None
+    failed = 0
+    for blocks in cands:
+        bt, bs, br = blocks
+
+        def call(a, b, bt=bt, bs=bs, br=br):
+            return gr_matmul_planar(
+                a, b, ring, bt=bt, bs=bs, br=br, interpret=interpret
+            )
+
+        try:
+            us = _median_us(jax.jit(call), A, B, iters=iters)
+        except Exception:  # noqa: BLE001 - a candidate that fails to lower
+            # or exhausts VMEM on the real device (the static budget here
+            # is only a heuristic) must not abort the sweep: skip it and
+            # keep the winners measured so far
+            failed += 1
+            continue
+        if best is None or us < best[0]:
+            best = (us, blocks)
+    if best is None:
+        raise ValueError(
+            f"no runnable kernel candidate for {key} "
+            f"({len(cands)} tried, {failed} failed; VMEM/grid limits)"
+        )
+
+    us, blocks = best
+    result = TuneResult(key=key, blocks=blocks, us=us, tried=len(cands))
+    entries = _disk_cache()
+    entries[key] = {"blocks": list(blocks), "us": round(us, 1),
+                    "tried": len(cands)}
+    _LRU.pop(key, None)
+    if persist:
+        save_cache(entries, path)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI: retune / verify the committed cache (CI autotune-smoke)
+# ---------------------------------------------------------------------------
+
+# (ring constructor args, (t, r, s)) pairs the tier-1 suites lean on: the
+# paper's 8/16-worker rings GR(2^32, 3/4) and the machine-word ring Z_{2^32},
+# at the conformance tile (8^3) and the kernel-test block sizes.  The CI
+# autotune-smoke job verifies the committed cache covers all of these.
+DEFAULT_POINTS: Tuple[Tuple[Tuple[int, int, Tuple[int, ...]], Tuple[int, int, int]], ...] = tuple(
+    (ring_args, shape)
+    for ring_args in ((2, 32, ()), (2, 32, (3,)), (2, 32, (4,)))
+    for shape in ((8, 8, 8), (16, 16, 16), (64, 64, 64), (128, 128, 128))
+)
+
+
+def coverage_gaps(
+    entries: Dict[str, dict],
+    points: Sequence = DEFAULT_POINTS,
+    device: Optional[str] = None,
+) -> List[str]:
+    """Keys from ``points`` missing from ``entries`` (empty = full cover)."""
+    missing = []
+    for ring_args, (t, r, s) in points:
+        p, e, degrees = ring_args
+        key = tune_key(make_ring(p, e, tuple(degrees)), t, r, s, device)
+        if key not in entries:
+            missing.append(key)
+    return missing
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--budget", type=int, default=None,
+        help="max candidates timed per point (default: the full grid)",
+    )
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument(
+        "--out", default=None,
+        help=f"cache path to write (default {CACHE_PATH})",
+    )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="do not retune: verify the committed cache deserializes and "
+             "covers DEFAULT_POINTS for this device",
+    )
+    args = ap.parse_args(argv)
+
+    if args.check:
+        entries = load_cache(args.out)  # raises on malformed entries
+        gaps = coverage_gaps(entries)
+        print(f"cache OK: {len(entries)} entries at "
+              f"{args.out or CACHE_PATH}")
+        if gaps:
+            print("MISSING tier-1 coverage:")
+            for k in gaps:
+                print(f"  {k}")
+            return 1
+        print(f"covers all {len(DEFAULT_POINTS)} tier-1 points "
+              f"on device={device_kind()!r}")
+        return 0
+
+    for ring_args, (t, r, s) in DEFAULT_POINTS:
+        p, e, degrees = ring_args
+        ring = make_ring(p, e, tuple(degrees))
+        res = autotune(
+            ring, t, r, s, budget=args.budget, iters=args.iters,
+        )
+        print(f"{res.key}: blocks={res.blocks} us={res.us:.1f} "
+              f"(tried {res.tried})")
+    out = save_cache(_disk_cache(), args.out)
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,10 @@ from repro.core.galois import Ring
 MAX_D = 16  # unrolled D^2 dots per block; beyond this use the jnp reference
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, ring: Ring, nsteps_r: int):
     """Grid (T/bt, S/bs, R/br); planar blocks.
 
@@ -90,7 +94,11 @@ def gr_matmul_planar(
 ) -> jnp.ndarray:
     """Planar GR matmul: A (D, T, R), B (D, R, S) -> (D, T, S).
 
-    Shapes must already be padded to multiples of the block sizes.
+    Block sizes need not divide the dims: oversized blocks are clamped to
+    the 8-aligned dim and the operands are zero-padded up to block
+    multiples (zeros contribute zero to the coefficient convolution), so
+    autotuner candidates and odd-shaped CDMM tiles never crash the kernel
+    path.  The output is sliced back to the input (T, S).
     """
     if ring.p != 2 or ring.e > 32:
         raise ValueError("kernel supports the machine-word case p=2, e<=32")
@@ -99,11 +107,18 @@ def gr_matmul_planar(
     D, T, R = A.shape
     _, R2, S = B.shape
     assert R == R2 and D == ring.D
-    assert T % bt == 0 and S % bs == 0 and R % br == 0, (A.shape, B.shape, (bt, bs, br))
-    grid = (T // bt, S // bs, R // br)
+    bt = min(bt, _round_up(T, 8))
+    bs = min(bs, _round_up(S, 8))
+    br = min(br, _round_up(R, 8))
+    Tp, Sp, Rp = _round_up(T, bt), _round_up(S, bs), _round_up(R, br)
+    if (Tp, Rp) != (T, R):
+        A = jnp.pad(A, ((0, 0), (0, Tp - T), (0, Rp - R)))
+    if (Rp, Sp) != (R, S):
+        B = jnp.pad(B, ((0, 0), (0, Rp - R), (0, Sp - S)))
+    grid = (Tp // bt, Sp // bs, Rp // br)
 
     kern = functools.partial(_kernel, ring=ring, nsteps_r=grid[2])
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -111,10 +126,11 @@ def gr_matmul_planar(
             pl.BlockSpec((D, br, bs), lambda i, j, k: (0, k, j)),
         ],
         out_specs=pl.BlockSpec((D, bt, bs), lambda i, j, k: (0, i, j)),
-        out_shape=jax.ShapeDtypeStruct((D, T, S), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((D, Tp, Sp), jnp.uint32),
         scratch_shapes=[pltpu.VMEM((ring.K, bt, bs), jnp.uint32)],
         interpret=interpret,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(A, B)
+    return out if (Tp, Sp) == (T, S) else out[:, :T, :S]

@@ -1,8 +1,9 @@
 """Jit-ready wrappers around the Pallas Galois-ring matmul kernel.
 
 Handles layout conversion (interleaved (t, r, D) <-> planar (D, t, r)),
-padding to block multiples, block-size selection, and fallback to the jnp
-reference when the ring is outside the kernel envelope (odd p or D > MAX_D).
+padding to block multiples, block-size selection (autotuned cache first,
+static heuristic as fallback), and fallback to the jnp reference when the
+ring is outside the kernel envelope (odd p or D > MAX_D).
 """
 from __future__ import annotations
 
@@ -13,12 +14,9 @@ import jax.numpy as jnp
 
 from repro.core.galois import Ring
 
-from .gr_matmul import MAX_D, gr_matmul_planar
+from .autotune import cached_blocks
+from .gr_matmul import MAX_D, _round_up, gr_matmul_planar
 from .ref import gr_matmul_ref
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def pick_blocks(t: int, r: int, s: int) -> Tuple[int, int, int]:
@@ -33,6 +31,19 @@ def pick_blocks(t: int, r: int, s: int) -> Tuple[int, int, int]:
 
 def kernel_supported(ring: Ring) -> bool:
     return ring.p == 2 and ring.e <= 32 and ring.D <= MAX_D
+
+
+def kernel_auto_enabled(ring: Ring) -> bool:
+    """Should a backend default its workers onto the kernel path?
+
+    True when the ring is inside the kernel envelope AND the kernel
+    actually compiles — i.e. on TPU, the only Pallas target this kernel
+    lowers for (VMEM scratch + Mosaic compiler params).  On CPU it would
+    run in interpret mode (a validation path, not a perf path) and on GPU
+    it would fail to lower, so both default to the XLA reference unless
+    explicitly forced.
+    """
+    return kernel_supported(ring) and jax.default_backend() == "tpu"
 
 
 def gr_matmul(
@@ -56,6 +67,10 @@ def gr_matmul(
         return gr_matmul_ref(A, B, ring)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if blocks is None:
+        # tuned schedule for this (device, ring, tile) when one is cached;
+        # the static MXU heuristic otherwise
+        blocks = cached_blocks(ring, t, r, s)
     bt, bs, br = blocks if blocks else pick_blocks(t, r, s)
     tp, rp, sp = _round_up(t, bt), _round_up(r, br), _round_up(s, bs)
     Ap = jnp.moveaxis(jnp.pad(A, ((0, tp - t), (0, rp - r), (0, 0))), -1, 0)

@@ -1,0 +1,263 @@
+"""Planner calibration: coefficient fitting from benchmark rows, JSON
+round-trip, env-var gating, and the headline property — rankings follow
+the fitted wall-time coefficients (perturbing them flips the plan)."""
+import json
+
+import pytest
+
+from repro.cdmm import ProblemSpec, plan
+from repro.cdmm import calibrate as cal_mod
+from repro.cdmm.calibrate import (
+    Calibration,
+    CalibrationSet,
+    fit_rows,
+    load_calibration,
+    save_calibration,
+)
+from repro.core import make_ring
+
+Z32 = make_ring(2, 32, ())
+
+
+@pytest.fixture(autouse=True)
+def no_ambient_calibration(monkeypatch):
+    """Tests pin their calibration explicitly; the committed
+    benchmarks/calibration.json must not leak into plan() calls here."""
+    monkeypatch.setenv("REPRO_CALIBRATION", "off")
+    cal_mod.invalidate_calibration_cache()
+    yield
+    cal_mod.invalidate_calibration_cache()
+
+
+def _row(name, us, **derived):
+    return {"name": name, "us": us, "derived": derived}
+
+
+# ------------------------------------------------------------------ fitting
+
+
+def test_fit_rows_recovers_exact_coefficients():
+    rows = [
+        _row("a_encode", 200.0, encode_ops=1000.0, backend="local"),
+        _row("a_worker", 50.0, worker_ops=500.0, backend="local"),
+        _row("a_decode", 30.0, decode_ops=100.0, backend="local"),
+        _row("a_comm", 10.0, comm_elems=2000.0, backend="local"),
+    ]
+    cal = fit_rows(rows).for_backend("local")
+    assert cal.coef == pytest.approx(
+        {"encode": 0.2, "compute": 0.1, "decode": 0.3, "comm": 0.005}
+    )
+    assert cal.nrows == 4
+
+
+def test_fit_rows_least_squares_through_origin():
+    # two noisy observations: slope = sum(xy)/sum(x^2)
+    rows = [
+        _row("a_worker", 10.0, worker_ops=100.0, backend="local"),
+        _row("b_worker", 30.0, worker_ops=200.0, backend="local"),
+    ]
+    cal = fit_rows(rows).for_backend("local")
+    assert cal.coef["compute"] == pytest.approx(
+        (10 * 100 + 30 * 200) / (100**2 + 200**2)
+    )
+
+
+def test_fit_rows_skips_untimed_unknown_and_featureless():
+    rows = [
+        _row("a_encode", 0.0, encode_ops=10.0),        # untimed (analytic)
+        _row("a_mystery", 5.0, encode_ops=10.0),       # unknown stage suffix
+        _row("a_decode", 5.0),                          # feature missing
+        _row("a_worker", -1.0, worker_ops=10.0),        # negative us
+    ]
+    assert fit_rows(rows).backends == {}
+
+
+def test_fit_rows_separates_backends_with_local_fallback():
+    rows = [
+        _row("a_worker", 10.0, worker_ops=100.0, backend="local"),
+        _row("b_worker", 40.0, worker_ops=100.0, backend="elastic"),
+    ]
+    cs = fit_rows(rows)
+    assert cs.for_backend("elastic").coef["compute"] == pytest.approx(0.4)
+    assert cs.for_backend("local").coef["compute"] == pytest.approx(0.1)
+    # unknown backend falls back to local's coefficients
+    assert cs.for_backend("shard_map").coef["compute"] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------- JSON I/O
+
+
+def test_calibration_roundtrip(tmp_path):
+    cs = fit_rows([
+        _row("a_encode", 7.0, encode_ops=10.0, backend="local"),
+        _row("a_comm", 3.0, comm_elems=6.0, backend="local"),
+    ])
+    path = tmp_path / "calibration.json"
+    save_calibration(cs, path)
+    loaded = load_calibration(path, cache=False)
+    assert loaded.for_backend("local").coef == pytest.approx(
+        cs.for_backend("local").coef
+    )
+
+
+def test_load_calibration_rejects_bad_payloads(tmp_path):
+    bad_version = tmp_path / "v.json"
+    bad_version.write_text(json.dumps({"version": 999, "backends": {}}))
+    assert load_calibration(bad_version, cache=False) is None
+    bad_coef = tmp_path / "c.json"
+    bad_coef.write_text(json.dumps({
+        "version": cal_mod.CALIBRATION_VERSION,
+        "backends": {"local": {"coef": {"quantum": 1.0}}},
+    }))
+    assert load_calibration(bad_coef, cache=False) is None
+    assert load_calibration(tmp_path / "missing.json", cache=False) is None
+
+
+def test_env_var_disables_autoload(monkeypatch):
+    monkeypatch.setenv("REPRO_CALIBRATION", "off")
+    assert load_calibration(cache=False) is None
+
+
+def test_committed_calibration_loads():
+    """The committed benchmarks/calibration.json must parse and carry at
+    least the local backend with positive coefficients."""
+    cs = load_calibration(cal_mod.DEFAULT_CALIBRATION_PATH, cache=False)
+    assert cs is not None, "committed calibration.json missing or invalid"
+    local = cs.for_backend("local")
+    assert local is not None and local.coef
+    assert all(v >= 0.0 for v in local.coef.values())
+
+
+# ------------------------------------------------------- planner semantics
+
+
+def _single_coef_set(name, value=1.0):
+    return CalibrationSet(backends={
+        "local": Calibration(backend="local", coef={name: value})
+    })
+
+
+def test_plan_ranks_by_fitted_coefficients_and_perturbation_flips():
+    """The acceptance property: with a calibration present, "latency" ranks
+    by predicted wall time — so swinging the fitted coefficients between
+    two cost terms must flip which candidate (here: which scheme family)
+    wins.  encode-dominated coefficients favor GCSA's cheap encode at this
+    spec; compute-dominated ones favor Batch-EP_RMFE."""
+    spec = ProblemSpec(32, 32, 32, n=4, ring=Z32, N=16)
+    p_enc = plan(spec, objective="latency",
+                 calibration=_single_coef_set("encode"))
+    p_comp = plan(spec, objective="latency",
+                  calibration=_single_coef_set("compute"))
+    assert p_enc.best.scheme == "gcsa"
+    assert p_comp.best.scheme == "batch_ep_rmfe"
+    assert p_enc.best.scheme != p_comp.best.scheme
+
+    # and the scores are exactly the fitted linear model
+    for p, term in ((p_enc, "encode_ops"), (p_comp, "worker_ops")):
+        for c in p.candidates:
+            assert c.score == pytest.approx(getattr(c.costs, term))
+
+
+def test_plan_calibration_false_is_analytic():
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    p = plan(spec, objective="latency", calibration=False)
+    for c in p.candidates:
+        co = c.costs
+        assert c.score == pytest.approx(
+            co.encode_ops + co.worker_ops + co.decode_ops
+            + co.upload + co.download
+        )
+
+
+def test_plan_time_to_R_uses_calibrated_serial_tiebreak():
+    from math import log1p
+
+    from repro.cdmm.planner import expected_time_to_R
+
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    cal = _single_coef_set("decode", 1000.0)
+    p = plan(spec, objective="time_to_R", calibration=cal)
+    for c in p.candidates:
+        assert c.score == pytest.approx(
+            expected_time_to_R(c.costs.N, c.costs.R)
+            + 1e-6 * log1p(c.costs.decode_ops * 1000.0)
+        )
+    # the order statistic must stay the leading term: no candidate's
+    # calibrated tie-break comes close to the smallest E[t_R] gap
+    ts = sorted({expected_time_to_R(c.costs.N, c.costs.R)
+                 for c in p.candidates})
+    min_gap = min(b - a for a, b in zip(ts, ts[1:]))
+    worst_tiebreak = max(
+        1e-6 * log1p(c.costs.decode_ops * 1000.0) for c in p.candidates
+    )
+    assert worst_tiebreak < min_gap
+
+
+def test_plan_empty_calibration_falls_back_to_analytic():
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    empty = CalibrationSet(backends={
+        "local": Calibration(backend="local", coef={})
+    })
+    p = plan(spec, objective="latency", calibration=empty)
+    p0 = plan(spec, objective="latency", calibration=False)
+    assert [c.score for c in p.candidates] == [c.score for c in p0.candidates]
+
+
+def _full_coef_set(device=None):
+    return CalibrationSet(
+        backends={"local": Calibration(
+            backend="local",
+            # NOT all-ones: that would coincide with the analytic proxy sum
+            coef={"encode": 2.0, "compute": 1.0, "decode": 1.0, "comm": 1.0},
+        )},
+        device=device,
+    )
+
+
+def test_autoloaded_calibration_requires_device_match(tmp_path, monkeypatch):
+    """A committed file fitted on different hardware must not rank plans
+    here: auto-load falls back to the analytic proxy on device mismatch
+    (an explicitly pinned CalibrationSet remains the caller's business)."""
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    path = tmp_path / "foreign.json"
+    save_calibration(_full_coef_set(device="not-this-device"), path)
+    monkeypatch.setenv("REPRO_CALIBRATION", str(path))
+    cal_mod.invalidate_calibration_cache()
+    p = plan(spec, objective="latency")
+    p0 = plan(spec, objective="latency", calibration=False)
+    assert [c.score for c in p.candidates] == [c.score for c in p0.candidates]
+    # same file pinned explicitly: trusted as-is
+    pinned = load_calibration(path, cache=False)
+    pp = plan(spec, objective="latency", calibration=pinned)
+    assert pp.candidates[0].score != p0.candidates[0].score
+
+
+def test_autoloaded_partial_calibration_falls_back(tmp_path, monkeypatch):
+    """An auto-loaded fit missing a cost term would silently score it as
+    free — the planner must reject it and keep the analytic proxy."""
+    import jax
+
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    partial = CalibrationSet(
+        backends={"local": Calibration(backend="local",
+                                       coef={"encode": 123.0})},
+        device=jax.default_backend(),
+    )
+    path = tmp_path / "partial.json"
+    save_calibration(partial, path)
+    monkeypatch.setenv("REPRO_CALIBRATION", str(path))
+    cal_mod.invalidate_calibration_cache()
+    p = plan(spec, objective="latency")
+    p0 = plan(spec, objective="latency", calibration=False)
+    assert [c.score for c in p.candidates] == [c.score for c in p0.candidates]
+
+
+def test_objectives_without_calibration_semantics_unchanged():
+    spec = ProblemSpec(16, 16, 16, n=2, ring=Z32, N=8)
+    cal = _single_coef_set("compute", 999.0)
+    for objective in ("threshold", "download", "upload"):
+        pc = plan(spec, objective=objective, calibration=cal)
+        pa = plan(spec, objective=objective, calibration=False)
+        assert [c.score for c in pc.candidates] == [
+            c.score for c in pa.candidates
+        ]

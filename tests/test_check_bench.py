@@ -1,0 +1,134 @@
+"""tools/check_bench.py: baseline diffing and the rolling-history gate."""
+import importlib.util
+import json
+from pathlib import Path
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parents[1] / "tools" / "check_bench.py",
+)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def test_compare_flags_regressions_and_improvements():
+    baseline = {"a": 100.0, "b": 100.0, "c": 100.0, "gone": 5.0,
+                "analytic": 0.0}
+    current = {"a": 130.0, "b": 70.0, "c": 101.0, "new": 9.0,
+               "analytic": 0.0}
+    reg, imp, skip = check_bench.compare(baseline, current, 0.25)
+    assert [r[0] for r in reg] == ["a"]
+    assert [i[0] for i in imp] == ["b"]
+    skipped_names = {s[0] for s in skip}
+    assert {"gone", "analytic", "new"} <= skipped_names
+
+
+def test_rolling_reference_median_needs_two_samples():
+    history = [
+        {"sha": "s1", "rows": {"a": 100.0, "b": 50.0}},
+        {"sha": "s2", "rows": {"a": 120.0}},
+        {"sha": "s3", "rows": {"a": 80.0}},
+    ]
+    ref = check_bench.rolling_reference(history, window=5)
+    assert ref == {"a": 100.0}  # median of [80, 100, 120]; b has 1 sample
+    # the window counts samples per row from the newest end
+    ref2 = check_bench.rolling_reference(history, window=2)
+    assert ref2 == {"a": 100.0}  # median of [80, 120]
+
+
+def test_rolling_reference_survives_withheld_recent_entries():
+    """A row withheld from every recent entry (persistent regression) must
+    keep its last-known-good reference: samples are gathered per row
+    across the retained history, not just the last `window` entries."""
+    history = (
+        [{"sha": "g1", "rows": {"x": 100.0}},
+         {"sha": "g2", "rows": {"x": 104.0}}]
+        + [{"sha": f"w{i}", "rows": {}} for i in range(10)]  # x withheld
+    )
+    ref = check_bench.rolling_reference(history, window=5)
+    assert ref == {"x": 102.0}  # the regression stays gated
+
+
+def test_history_append_replaces_rerun_and_caps(tmp_path):
+    path = tmp_path / "hist.json"
+    history = [{"sha": f"s{i}", "rows": {"a": float(i)}} for i in range(3)]
+    check_bench.append_history(history, "s1", {"a": 99.0}, str(path))
+    out = json.loads(path.read_text())
+    assert [e["sha"] for e in out] == ["s0", "s2", "s1"]  # s1 re-run moved
+    assert out[-1]["rows"] == {"a": 99.0}
+
+    big = [{"sha": f"c{i}", "rows": {}} for i in range(200)]
+    check_bench.append_history(big, "tip", {}, str(path))
+    out = json.loads(path.read_text())
+    assert len(out) == check_bench.HISTORY_MAX_ENTRIES
+    assert out[-1]["sha"] == "tip"
+
+
+def test_load_history_tolerates_missing_and_corrupt(tmp_path):
+    assert check_bench.load_history(str(tmp_path / "none.json")) == []
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert check_bench.load_history(str(bad)) == []
+    notalist = tmp_path / "obj.json"
+    notalist.write_text('{"sha": "x"}')
+    assert check_bench.load_history(str(notalist)) == []
+
+
+def test_end_to_end_gate_with_history(tmp_path, monkeypatch, capsys):
+    """A row that regresses only against the rolling window (the committed
+    baseline is stale-slow) must still fail the gate."""
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "current.json"
+    hist = tmp_path / "hist.json"
+    # baseline recorded on a slow machine: 1000us; recent runs: ~100us
+    baseline.write_text(json.dumps([{"name": "x", "us": 1000.0,
+                                     "derived": {}}]))
+    current.write_text(json.dumps([{"name": "x", "us": 300.0,
+                                    "derived": {}}]))
+    hist.write_text(json.dumps([
+        {"sha": "a", "rows": {"x": 100.0}},
+        {"sha": "b", "rows": {"x": 110.0}},
+    ]))
+    monkeypatch.setattr("sys.argv", [
+        "check_bench.py", "--baseline", str(baseline), "--current",
+        str(current), "--history", str(hist), "--commit", "deadbeef",
+    ])
+    rc = check_bench.main()
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSION[rolling] x" in out
+    # the run was still appended so the chain keeps moving — but the
+    # rolling-regressed row is withheld, so the rolling median cannot
+    # ratchet toward the regression and disarm the gate
+    entry = json.loads(hist.read_text())[-1]
+    assert entry["sha"] == "deadbeef"
+    assert "x" not in entry["rows"]
+
+
+def test_baseline_only_regression_still_feeds_history(tmp_path, monkeypatch,
+                                                      capsys):
+    """A row slower than the machine-specific committed baseline but in
+    line with recent runs must keep flowing into the rolling history —
+    otherwise a slower runner class could never build a usable window."""
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "current.json"
+    hist = tmp_path / "hist.json"
+    baseline.write_text(json.dumps([{"name": "x", "us": 100.0,
+                                     "derived": {}}]))
+    current.write_text(json.dumps([{"name": "x", "us": 300.0,
+                                    "derived": {}}]))  # 3x the baseline...
+    hist.write_text(json.dumps([
+        {"sha": "a", "rows": {"x": 290.0}},  # ...but normal for this runner
+        {"sha": "b", "rows": {"x": 310.0}},
+    ]))
+    monkeypatch.setattr("sys.argv", [
+        "check_bench.py", "--baseline", str(baseline), "--current",
+        str(current), "--history", str(hist), "--commit", "cafe",
+    ])
+    rc = check_bench.main()
+    out = capsys.readouterr().out
+    assert rc == 1  # baseline gate still fires (advisory job surfaces it)
+    assert "REGRESSION[baseline] x" in out
+    assert "REGRESSION[rolling]" not in out
+    entry = json.loads(hist.read_text())[-1]
+    assert entry["sha"] == "cafe" and entry["rows"] == {"x": 300.0}

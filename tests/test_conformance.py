@@ -51,6 +51,7 @@ from repro.cdmm import (  # noqa: E402
     registered_schemes,
 )
 from repro.cdmm.api import ProblemSpec  # noqa: E402
+from repro.kernels import kernel_supported  # noqa: E402
 
 Z32 = make_ring(2, 32, ())
 NDEV = len(jax.devices())
@@ -130,18 +131,20 @@ def _random_problem(scheme, spec, rng, mult):
     return A, B, expect
 
 
-def _run_backend(scheme, backend, A, B, mask, key):
+def _run_backend(scheme, backend, A, B, mask, key, use_kernel=False):
     mask = jnp.asarray(mask)
     if backend == "elastic":
-        return coded_matmul(A, B, scheme, backend=_ELASTIC, mask=mask, key=key)
+        be = ElasticBackend(use_kernel=True) if use_kernel else _ELASTIC
+        return coded_matmul(A, B, scheme, backend=be, mask=mask, key=key)
     if backend == "shard_map":
         return coded_matmul(
-            A, B, scheme, backend=ShardMapBackend(), mask=mask, key=key
+            A, B, scheme, backend=ShardMapBackend(use_kernel=use_kernel),
+            mask=mask, key=key,
         )
     return coded_matmul(A, B, scheme, backend="local", mask=mask, key=key)
 
 
-def check_conformance(name, backend, seed):
+def check_conformance(name, backend, seed, use_kernel=False):
     """One property check: random inputs + a random R-subset of responders
     must decode to exactly the oracle product on the given backend."""
     spec, scheme = build_scheme(name)
@@ -153,10 +156,11 @@ def check_conformance(name, backend, seed):
     mask = np.zeros(scheme.N, dtype=bool)
     mask[live] = True
     key = jax.random.fold_in(KEY, seed)
-    C = np.asarray(_run_backend(scheme, backend, A, B, mask, key))
+    C = np.asarray(_run_backend(scheme, backend, A, B, mask, key, use_kernel))
     np.testing.assert_array_equal(
         C, expect,
-        err_msg=f"{name} on {backend} (seed={seed}, live={sorted(live)})",
+        err_msg=f"{name} on {backend} (seed={seed}, live={sorted(live)}, "
+                f"use_kernel={use_kernel})",
     )
 
 
@@ -185,6 +189,24 @@ def test_every_registered_family_is_covered():
 def test_conformance_sweep(name, backend, seed):
     """Deterministic fallback sweep: always runs, hypothesis or not."""
     check_conformance(name, backend, seed)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    [pytest.param(b, marks=needs8 if b == "shard_map" else ())
+     for b in ("shard_map", "elastic")],
+)
+@pytest.mark.parametrize("name", sorted(registered_schemes()))
+def test_conformance_sweep_use_kernel(name, backend):
+    """The distributed backends' forced-kernel path (workers compute their
+    block product through the Pallas gr_matmul, interpret mode on CPU)
+    must stay bit-identical for every family whose codeword ring is inside
+    the kernel envelope — the configuration ShardMapBackend/ElasticBackend
+    auto-select where the kernel compiles."""
+    _, scheme = build_scheme(name)
+    if not kernel_supported(scheme.ring):
+        pytest.skip(f"{scheme.ring} outside the kernel envelope")
+    check_conformance(name, backend, seed=3, use_kernel=True)
 
 
 if HAVE_HYPOTHESIS:

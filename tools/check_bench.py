@@ -1,20 +1,32 @@
 #!/usr/bin/env python
 """Benchmark regression gate: diff a fresh BENCH_*.json against a committed
-baseline and exit 1 when any timed row regresses beyond the threshold.
+baseline — and, optionally, against a rolling window of previous CI runs —
+and exit 1 when any timed row regresses beyond the threshold.
 
     python tools/check_bench.py --baseline benchmarks/baseline.json \
-        --current BENCH_ci.json [--threshold 0.25]
+        --current BENCH_ci.json [--threshold 0.25] \
+        [--history bench_history.json --commit $GITHUB_SHA]
 
 Rows are matched by ``name`` on the ``us`` (median microseconds per call)
 field.  Analytic rows (us == 0) and rows present in only one file are
 reported but never fail the gate — new benchmarks should not need a
 baseline update to land, and retired ones should not block forever.
+
+``--history`` makes the perf trajectory durable: the file is a JSON list of
+``{"sha": ..., "rows": {name: us}}`` entries (newest last) that CI chains
+through a ``bench-history`` artifact.  The current run is gated against the
+median of the last ``--window`` entries per row (so a regression against
+where the code has *recently* been fails even after the committed baseline
+goes stale), then appended (keyed by ``--commit``) and written back.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+HISTORY_MAX_ENTRIES = 50  # cap the chained artifact's growth
 
 
 def load_rows(path: str) -> dict:
@@ -44,6 +56,66 @@ def compare(baseline: dict, current: dict, threshold: float):
     return regressions, improvements, skipped
 
 
+def load_history(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return []  # corrupt chain: restart it rather than wedge CI forever
+    return hist if isinstance(hist, list) else []
+
+
+def rolling_reference(history: list, window: int) -> dict:
+    """Per-row median us over each row's last ``window`` SAMPLES (only
+    rows timed in at least two runs — a single sample is no trend).
+
+    Samples are collected newest-first across the whole retained history,
+    not just the last ``window`` entries: rows withheld from recent
+    entries (persistent rolling regressions) keep their last-known-good
+    reference instead of starving out of the window after ``window`` runs
+    and letting the regression ratchet in un-gated.  A row only ages out
+    with the HISTORY_MAX_ENTRIES cap — a much longer human-attention
+    horizon."""
+    samples: dict = {}
+    for entry in reversed(history):
+        for name, us in entry.get("rows", {}).items():
+            if us > 0.0 and len(samples.setdefault(name, [])) < window:
+                samples[name].append(float(us))
+    ref = {}
+    for name, vals in samples.items():
+        if len(vals) >= 2:
+            vals = sorted(vals)
+            mid = len(vals) // 2
+            ref[name] = (
+                vals[mid] if len(vals) % 2
+                else 0.5 * (vals[mid - 1] + vals[mid])
+            )
+    return ref
+
+
+def append_history(history: list, sha: str, current: dict, path: str) -> None:
+    history = [e for e in history if e.get("sha") != sha]  # re-runs replace
+    history.append({"sha": sha, "rows": current})
+    history = history[-HISTORY_MAX_ENTRIES:]
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def report(tag: str, regressions, improvements, skipped, threshold: float):
+    for name, why in skipped:
+        print(f"SKIP {name}: {why}")
+    for name, old, new, ratio in improvements:
+        print(f"FASTER {name}: {old:.1f}us -> {new:.1f}us ({ratio:.2f}x)")
+    for name, old, new, ratio in regressions:
+        print(
+            f"REGRESSION[{tag}] {name}: {old:.1f}us -> {new:.1f}us "
+            f"({ratio:.2f}x > {1 + threshold:.2f}x allowed)"
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
@@ -52,6 +124,19 @@ def main() -> int:
         "--threshold", type=float, default=0.25,
         help="fail when new > old * (1 + threshold), default 0.25",
     )
+    ap.add_argument(
+        "--history", default=None, metavar="PATH",
+        help="rolling bench-history JSON: gate against the recent-run "
+             "median, then append the current rows and write back",
+    )
+    ap.add_argument(
+        "--commit", default=os.environ.get("GITHUB_SHA", "local"),
+        help="commit SHA keying the appended history entry",
+    )
+    ap.add_argument(
+        "--window", type=int, default=5,
+        help="history entries the rolling median is computed over",
+    )
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -59,19 +144,44 @@ def main() -> int:
     regressions, improvements, skipped = compare(
         baseline, current, args.threshold
     )
+    report("baseline", regressions, improvements, skipped, args.threshold)
 
-    for name, why in skipped:
-        print(f"SKIP {name}: {why}")
-    for name, old, new, ratio in improvements:
-        print(f"FASTER {name}: {old:.1f}us -> {new:.1f}us ({ratio:.2f}x)")
-    for name, old, new, ratio in regressions:
-        print(
-            f"REGRESSION {name}: {old:.1f}us -> {new:.1f}us "
-            f"({ratio:.2f}x > {1 + args.threshold:.2f}x allowed)"
+    roll_regressions = []
+    failed = {name for name, *_ in regressions}
+    if args.history is not None:
+        history = load_history(args.history)
+        ref = rolling_reference(history, args.window)
+        if ref:
+            roll_regressions, roll_faster, _ = compare(
+                ref, current, args.threshold
+            )
+            report("rolling", roll_regressions, roll_faster, [],
+                   args.threshold)
+            print(f"rolling window: {min(len(history), args.window)} run(s), "
+                  f"{len(ref)} comparable row(s)")
+        else:
+            print("rolling window: no usable history yet (chain starts here)")
+        failed |= {name for name, *_ in roll_regressions}
+        # rows that regressed AGAINST THE ROLLING WINDOW are withheld from
+        # the appended entry: otherwise a persistent regression would
+        # ratchet into the median after ~window/2 runs and silently disarm
+        # the very gate that caught it.  Baseline-only regressions are NOT
+        # withheld — the committed baseline's absolute timings are
+        # machine-specific, and starving the window of rows a slower
+        # runner class can never match would defeat the window's whole
+        # purpose (tracking where the code has *recently* been).
+        roll_failed = {name for name, *_ in roll_regressions}
+        kept = {k: v for k, v in current.items() if k not in roll_failed}
+        append_history(history, args.commit, kept, args.history)
+        withheld = (
+            f", {len(roll_failed)} regressed row(s) withheld"
+            if roll_failed else ""
         )
-    if regressions:
-        print(f"FAIL: {len(regressions)} benchmark(s) regressed "
-              f">{args.threshold:.0%} vs {args.baseline}")
+        print(f"history: appended {args.commit[:12]} -> {args.history} "
+              f"({len(load_history(args.history))} entries{withheld})")
+    if failed:
+        print(f"FAIL: {len(failed)} benchmark(s) regressed "
+              f">{args.threshold:.0%} (baseline and/or rolling window)")
         return 1
     print(f"OK: {len(baseline)} baseline rows checked, no regression "
           f">{args.threshold:.0%}")

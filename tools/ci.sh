@@ -21,23 +21,32 @@ if [[ "${1:-}" != "--bench-only" ]]; then
     # suite (tests/test_conformance.py) stays under the fast-tier budget
     export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci-fast}"
   fi
-  python -m pytest -x -q
+  # tier-1 plans must be deterministic: rank by the analytic cost model,
+  # not by whatever timing data benchmarks/calibration.json was last
+  # regenerated from (tests that want calibration pin it explicitly)
+  REPRO_CALIBRATION="${REPRO_CALIBRATION:-off}" python -m pytest -x -q
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "== benchmark smoke: Table 1 + straggler/elastic + secure overhead =="
-  python -m benchmarks.run --only table1,straggler,secure --json BENCH_ci.json
+  echo "== benchmark smoke: Table 1 + straggler/elastic + secure + kernels =="
+  python -m benchmarks.run --only table1,straggler,secure,kernels \
+    --json BENCH_ci.json
   if [[ -f benchmarks/baseline.json ]]; then
     echo "== benchmark regression gate (>25% vs benchmarks/baseline.json) =="
     # the committed baseline's absolute timings are machine-specific, so the
     # gate is blocking only in CI (or with BENCH_STRICT=1); on an arbitrary
-    # dev box a slower CPU must not fail the local entry point
+    # dev box a slower CPU must not fail the local entry point.
+    # BENCH_HISTORY names a rolling bench-history chain (the CI bench-smoke
+    # job downloads the previous artifact into it): the gate then also
+    # compares against the recent-run median and appends this run.
+    gate_args=(--baseline benchmarks/baseline.json --current BENCH_ci.json)
+    if [[ -n "${BENCH_HISTORY:-}" ]]; then
+      gate_args+=(--history "$BENCH_HISTORY")
+    fi
     if [[ -n "${CI:-}" || -n "${BENCH_STRICT:-}" ]]; then
-      python tools/check_bench.py \
-        --baseline benchmarks/baseline.json --current BENCH_ci.json
+      python tools/check_bench.py "${gate_args[@]}"
     else
-      python tools/check_bench.py \
-        --baseline benchmarks/baseline.json --current BENCH_ci.json \
+      python tools/check_bench.py "${gate_args[@]}" \
         || echo "WARNING: bench gate failed (advisory outside CI)"
     fi
   fi
