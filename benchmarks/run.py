@@ -23,6 +23,14 @@ def main() -> None:
     # the calibration is fitted from these very rows), breaking row
     # identity for the regression gate and the rolling history
     os.environ.setdefault("REPRO_CALIBRATION", "off")
+    # the per-backend calibration rows (bench_single_cdmm.bench_backends)
+    # need an 8-device host mesh for their shard_map stage programs; CI
+    # sets this workflow-wide, so defaulting it here keeps local
+    # regenerations of benchmarks/calibration.json equivalent (must happen
+    # before jax initializes its backends)
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
     sections = ("figs", "table1", "kernels", "straggler", "secure")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")

@@ -212,6 +212,15 @@ _BACKENDS: dict = {
     "shard_map": ShardMapBackend,
 }
 
+# backends registered by modules that are deliberately not imported at
+# repro.cdmm import time: name -> module whose import registers it.  "pool"
+# spawns threads/subprocess machinery, so it only loads on first use —
+# which is what keeps coded_matmul(..., backend="pool") a one-line switch
+# without a mandatory `import repro.dist`.
+_LAZY_BACKENDS: dict = {
+    "pool": "repro.dist",
+}
+
 
 def register_backend(name: str, factory: Callable[[], object]) -> None:
     """Register a backend factory under ``name`` (used by coded_matmul)."""
@@ -223,11 +232,16 @@ def get_backend(backend: Union[None, str, object]):
     if backend is None:
         return LocalSimBackend()
     if isinstance(backend, str):
+        if backend not in _BACKENDS and backend in _LAZY_BACKENDS:
+            import importlib
+
+            importlib.import_module(_LAZY_BACKENDS[backend])
         try:
             return _BACKENDS[backend]()
         except KeyError:
             raise ValueError(
-                f"unknown backend {backend!r}; one of {sorted(_BACKENDS)}"
+                f"unknown backend {backend!r}; one of "
+                f"{sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))}"
             ) from None
     return backend
 

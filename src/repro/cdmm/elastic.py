@@ -55,6 +55,8 @@ __all__ = [
     "ElasticStats",
     "ElasticStream",
     "NotEnoughResponders",
+    "decode_responses",
+    "worker_closures",
 ]
 
 
@@ -83,7 +85,29 @@ def _response_order(resp_ms: np.ndarray) -> np.ndarray:
     return np.lexsort((np.arange(len(resp_ms)), resp_ms))
 
 
-def _worker_closures(
+def decode_responses(
+    scheme: CdmmScheme, got: Dict[int, jnp.ndarray]
+) -> jnp.ndarray:
+    """The shared response-ordering/decode tail of every any-R master.
+
+    ``got`` maps worker index -> response for (at least) R workers.  The
+    live set is canonicalized to sorted order — the any-R decode is
+    subset-order agnostic as long as rows match ``idx``, and a canonical
+    order maximizes ``decode_op`` cache reuse across membership patterns.
+    Both the in-process elastic master and the multi-process pool master
+    (``repro.dist.master``) decode through here, so they are bit-identical
+    by construction.
+    """
+    if len(got) < scheme.R:
+        raise NotEnoughResponders(
+            f"{scheme.name}: decode needs R={scheme.R} responses, "
+            f"have {len(got)}"
+        )
+    idx = tuple(sorted(int(i) for i in got))[: scheme.R]
+    return scheme.decode_op(idx)(jnp.stack([got[i] for i in idx]))
+
+
+def worker_closures(
     scheme: CdmmScheme, keyed: bool = False, use_kernel: Optional[bool] = None
 ):
     """Jitted (encode_at, compute) closures, cached per scheme instance so
@@ -150,7 +174,7 @@ class ElasticBackend:
         self.max_threads = max_threads
         self.simulate_ms_scale = simulate_ms_scale
         # None = auto: workers use the tuned Pallas kernel wherever it
-        # compiles for the scheme's ring (see _worker_closures)
+        # compiles for the scheme's ring (see worker_closures)
         self.use_kernel = use_kernel
         self.last_stats: Optional[ElasticStats] = None
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -262,7 +286,7 @@ class ElasticBackend:
         dispatch = [i for i in np.argsort(trace.join_ms, kind="stable")
                     if trace.join_ms[i] <= t_R]
 
-        encode_at, compute = _worker_closures(
+        encode_at, compute = worker_closures(
             scheme, keyed=key is not None, use_kernel=self.use_kernel
         )
 
@@ -305,10 +329,8 @@ class ElasticBackend:
         finally:
             done.set()  # race past stragglers: wake any simulated sleeps
 
-        # canonical (sorted) live set maximizes decode_op cache reuse; the
-        # any-R decode is subset-order agnostic as long as rows match idx
+        C = decode_responses(scheme, got)
         idx = tuple(sorted(int(i) for i in fastR))
-        C = scheme.decode_op(idx)(jnp.stack([got[i] for i in idx]))
         stats = ElasticStats(
             fast_path=False,
             dispatched=tuple(int(i) for i in dispatch),

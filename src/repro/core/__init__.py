@@ -13,6 +13,7 @@ from .secure import (
     smallest_secure_ext,
 )
 from .straggler import (
+    MembershipEvents,
     WorkerTrace,
     sample_trace,
     select_workers,
@@ -29,5 +30,5 @@ __all__ = [
     "SecureEPCode", "SecureEP", "SecureBatchEPRMFE",
     "secure_recovery_threshold", "smallest_secure_ext",
     "select_workers", "simulate_stragglers", "straggler_latencies",
-    "WorkerTrace", "sample_trace",
+    "MembershipEvents", "WorkerTrace", "sample_trace",
 ]

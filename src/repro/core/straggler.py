@@ -25,6 +25,7 @@ __all__ = [
     "select_workers",
     "simulate_stragglers",
     "straggler_latencies",
+    "MembershipEvents",
     "WorkerTrace",
     "sample_trace",
 ]
@@ -118,6 +119,82 @@ class WorkerTrace:
         """Degenerate trace: everyone present from t=0, instant compute."""
         z = np.zeros(N)
         return WorkerTrace(z, np.full(N, np.inf), z)
+
+
+class MembershipEvents:
+    """Live join/leave/response bookkeeping that *produces* WorkerTraces.
+
+    ``WorkerTrace`` is one frozen realization of a membership process; a
+    running master (``repro.dist.master``) observes that process as events
+    instead.  This accumulator records real wall-clock joins, leaves and
+    response latencies per worker id and renders the history as a
+    ``WorkerTrace`` on demand, so everything built on trace semantics
+    (expected time-to-R, elastic-style stats, benchmark plots) applies
+    unchanged to a real multi-process pool.  Thread-safe: the master's
+    reader threads record concurrently.
+    """
+
+    def __init__(self):
+        import threading
+
+        self._lock = threading.Lock()
+        self._t0 = None  # epoch of the first event; trace times are relative
+        self._join: dict = {}
+        self._leave: dict = {}
+        self._last_response: dict = {}
+        self._order: list = []  # worker ids in join order (stable slots)
+
+    def _now_ms(self, t: float) -> float:
+        if self._t0 is None:
+            self._t0 = t
+        return (t - self._t0) * 1e3
+
+    def record_join(self, wid, t: float) -> None:
+        with self._lock:
+            if wid not in self._join:
+                self._join[wid] = self._now_ms(t)
+                self._order.append(wid)
+            self._leave.pop(wid, None)  # re-join after a recorded leave
+
+    def record_leave(self, wid, t: float) -> None:
+        with self._lock:
+            if wid in self._join and wid not in self._leave:
+                self._leave[wid] = self._now_ms(t)
+
+    def record_response(self, wid, compute_ms: float) -> None:
+        with self._lock:
+            if wid in self._join:
+                self._last_response[wid] = float(compute_ms)
+
+    def live(self) -> Tuple:
+        """Worker ids currently joined and not left, in join order."""
+        with self._lock:
+            return tuple(w for w in self._order if w not in self._leave)
+
+    def seen(self) -> Tuple:
+        with self._lock:
+            return tuple(self._order)
+
+    def trace(self) -> WorkerTrace:
+        """The observed history as a WorkerTrace over every worker seen.
+
+        Workers still in the pool get ``leave_ms = +inf``; a worker that
+        never responded gets ``compute_ms = +inf`` (it contributes no
+        response, exactly like a leaver mid-compute).
+        """
+        with self._lock:
+            join = np.array(
+                [self._join[w] for w in self._order], dtype=float
+            )
+            leave = np.array(
+                [self._leave.get(w, np.inf) for w in self._order],
+                dtype=float,
+            )
+            compute = np.array(
+                [self._last_response.get(w, np.inf) for w in self._order],
+                dtype=float,
+            )
+        return WorkerTrace(join, leave, compute)
 
 
 def sample_trace(

@@ -1,0 +1,57 @@
+"""repro.dist: a real multi-process worker-pool runtime behind coded_matmul.
+
+Every earlier backend (LocalSim, ShardMap, Elastic) *simulates* the paper's
+master/worker protocol inside one process — stragglers are ``WorkerTrace``
+fictions.  This package runs it for real:
+
+  * :mod:`repro.dist.protocol` — length-prefixed framed RPC (msgpack header
+    + raw-bytes array payloads) over TCP or Unix-domain sockets;
+  * :mod:`repro.dist.worker` — the worker-process entrypoint
+    (``python -m repro.dist.worker --connect ...``): registers with a
+    capability handshake (device kind, ring-arithmetic envelope, autotune
+    cache coverage) and computes jitted ``gr_matmul`` block products;
+  * :mod:`repro.dist.master` — the master: accepts workers, tracks
+    heartbeats and membership (``core.straggler.MembershipEvents``),
+    dispatches per-worker ``encode_*_at`` shares, re-dispatches the shares
+    of workers that die mid-request, and fires the LRU-cached any-R
+    ``decode_op`` at the R-th response; plus :class:`LocalPool`, which
+    spawns a local master + N worker OS processes in one call;
+  * :mod:`repro.dist.scheduler` — a serving scheduler (bounded queue,
+    admission control, per-spec plan cache) so one pool serves many
+    concurrent matmul requests;
+  * :mod:`repro.dist.pool_backend` — :class:`PoolBackend`, registered as
+    ``coded_matmul(A, B, plan, backend="pool")``.
+
+Importing this package registers the ``"pool"`` backend; ``cdmm.backends``
+also lazy-imports it on first use, so the one-line switch works without an
+explicit ``import repro.dist``.
+
+Determinism: encode runs master-side (same process, same bits as
+LocalSim), worker compute is exact integer ring arithmetic (bit-identical
+across processes), and the decode subset is the canonical sorted first-R
+arrival set — so a fixed encode key gives bit-identical results to
+``LocalSimBackend`` even under real worker deaths (property-tested in
+tests/test_conformance.py and tests/test_dist.py).
+"""
+from repro.cdmm.backends import register_backend
+
+from .master import LocalPool, Master, PoolStats, WorkerDied
+from .pool_backend import PoolBackend, default_pool, shutdown_default_pool
+from .protocol import recv_msg, send_msg
+from .scheduler import PoolScheduler, SchedulerSaturated
+
+register_backend("pool", PoolBackend)
+
+__all__ = [
+    "LocalPool",
+    "Master",
+    "PoolBackend",
+    "PoolScheduler",
+    "PoolStats",
+    "SchedulerSaturated",
+    "WorkerDied",
+    "default_pool",
+    "shutdown_default_pool",
+    "recv_msg",
+    "send_msg",
+]

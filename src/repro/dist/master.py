@@ -1,0 +1,629 @@
+"""Pool master: real workers, heartbeats, death detection, any-R decode.
+
+:class:`Master` listens on a socket, accepts worker registrations (the
+``hello`` capability handshake), and executes coded matmuls against the
+pool: the master encodes per-worker shares with the same jitted
+``encode_*_at`` closures the elastic backend uses, ships each share to a
+live worker process, and fires the LRU-cached any-R ``decode_op`` the
+moment the R-th response lands — through
+:func:`repro.cdmm.elastic.decode_responses`, the exact decode tail of the
+in-process elastic master, so the two paths are bit-identical by
+construction.
+
+Failure model.  A worker is dead when its socket drops (SIGKILL, crash,
+network) or its heartbeat goes silent past ``heartbeat_timeout``.  Death
+mid-request re-dispatches the worker's unanswered shares to surviving
+workers (any process can compute any share — the share index, not the
+process, is the paper's "worker"), so a request completes as long as one
+process survives and R distinct shares can still be computed.  Membership
+is tracked by :class:`repro.core.straggler.MembershipEvents`, so the
+observed join/leave/response history is available as a real
+:class:`~repro.core.straggler.WorkerTrace` (``Master.trace()``) and plugs
+into everything built on trace semantics.
+
+Shares are multiplexed: a pool of W processes serves schemes with any N
+(round-robin assignment), decoupling pool size from the code's worker
+count.  Requests are multiplexed too — every task carries a request id and
+responses are routed to per-request queues — which is what lets the
+serving scheduler (:mod:`repro.dist.scheduler`) keep several requests in
+flight over one pool.
+
+:class:`LocalPool` spawns a master plus N ``python -m repro.dist.worker``
+OS processes on a Unix-domain socket (TCP fallback) in one call, with
+``kill()`` for failure injection and clean shutdown on ``close()``.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cdmm.elastic import NotEnoughResponders, decode_responses, worker_closures
+from repro.core.straggler import MembershipEvents
+
+from .protocol import ProtocolError, listen, recv_msg, send_msg
+
+__all__ = ["LocalPool", "Master", "PoolStats", "WorkerDied"]
+
+
+def _shutdown_socket(sock: socket.socket) -> None:
+    """Force-wake any thread blocked reading ``sock``, then close it.
+    ``close()`` alone leaves a blocked ``recv`` sleeping forever;
+    ``shutdown(SHUT_RDWR)`` delivers EOF first."""
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
+class WorkerDied(RuntimeError):
+    """A request became impossible: too few live workers remain to compute
+    R distinct shares (every surviving share was already re-dispatched)."""
+
+
+@dataclass(frozen=True)
+class PoolStats:
+    """Accounting of one pool execution (real wall-clock, real processes)."""
+
+    dispatched: Tuple[int, ...]  # share indices shipped to workers
+    live_idx: Tuple[int, ...]  # the R-subset actually decoded from
+    workers: Tuple[int, ...]  # pool worker ids that served shares
+    redispatched: int  # shares re-shipped after a worker death
+    wall_ms: float  # master wall-clock for the call
+    time_to_R_ms: float  # wall-clock until the R-th response landed
+
+
+class _WorkerHandle:
+    def __init__(self, wid: int, sock: socket.socket, caps: Dict):
+        self.wid = wid
+        self.sock = sock
+        self.caps = caps
+        self.name = caps.get("name", f"worker-{wid}")
+        self.alive = True
+        self.last_seen = time.time()
+        self.send_lock = threading.Lock()
+
+    def send(self, header: Dict, arrays=None) -> None:
+        with self.send_lock:
+            send_msg(self.sock, header, arrays)
+
+
+class _Request:
+    """Routing state of one in-flight coded matmul."""
+
+    def __init__(self, rid: int, R: int):
+        self.rid = rid
+        self.R = R
+        self.events: "queue.Queue" = queue.Queue()
+        self.lock = threading.Lock()
+        # task_id -> (share index, fa, gb, wid currently assigned)
+        self.pending: Dict[int, Tuple[int, np.ndarray, np.ndarray, int]] = {}
+        self.redispatched = 0
+        self.done = False
+
+
+class Master:
+    """Accept workers, track membership, execute coded matmuls on the pool."""
+
+    def __init__(
+        self,
+        address: str = "tcp:127.0.0.1:0",
+        heartbeat_timeout: float = 5.0,
+        use_kernel: Optional[bool] = None,
+    ):
+        self._listener, self.address = listen(address)
+        self.heartbeat_timeout = heartbeat_timeout
+        # None = let each worker auto-select (kernel wherever it compiles on
+        # the worker's device); True/False force it pool-wide
+        self.use_kernel = use_kernel
+        self.membership = MembershipEvents()
+        self._workers: Dict[int, _WorkerHandle] = {}
+        self._requests: Dict[int, _Request] = {}
+        self._lock = threading.Lock()
+        self._joined = threading.Condition(self._lock)
+        self._next_wid = 0
+        self._next_rid = 0
+        self._next_task = 0
+        self._rr = 0  # round-robin cursor for share -> worker assignment
+        self._closed = False
+        # failure injection: per-worker-id compute delay stamped into task
+        # headers (tests/CI park a victim's compute so SIGKILL lands mid-task)
+        self.task_delay_ms: Dict[int, float] = {}
+        # error injection: these workers raise instead of computing, which
+        # exercises the bounded share-retry path without corrupting state
+        self.task_fail_wids: set = set()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="pool-accept", daemon=True
+        )
+        self._accept_thread.start()
+        self._monitor_thread = threading.Thread(
+            target=self._monitor_loop, name="pool-monitor", daemon=True
+        )
+        self._monitor_thread.start()
+
+    # -- membership --------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            threading.Thread(
+                target=self._register, args=(sock,), daemon=True
+            ).start()
+
+    def _register(self, sock: socket.socket) -> None:
+        try:
+            caps, _ = recv_msg(sock)
+        except (ProtocolError, OSError):
+            sock.close()
+            return
+        if caps.get("type") != "hello":
+            sock.close()
+            return
+        with self._lock:
+            wid = self._next_wid
+            self._next_wid += 1
+            handle = _WorkerHandle(wid, sock, caps)
+            self._workers[wid] = handle
+            self._joined.notify_all()
+        self.membership.record_join(wid, time.time())
+        threading.Thread(
+            target=self._reader_loop, args=(handle,),
+            name=f"pool-reader-{wid}", daemon=True,
+        ).start()
+
+    def _reader_loop(self, handle: _WorkerHandle) -> None:
+        try:
+            while True:
+                header, arrays = recv_msg(handle.sock)
+                handle.last_seen = time.time()
+                if header.get("type") == "result":
+                    self._route_result(handle, header, arrays)
+        except (ProtocolError, OSError):
+            self._on_death(handle)
+
+    def _monitor_loop(self) -> None:
+        while not self._closed:
+            time.sleep(min(self.heartbeat_timeout / 4.0, 0.5))
+            deadline = time.time() - self.heartbeat_timeout
+            with self._lock:
+                stale = [
+                    h for h in self._workers.values()
+                    if h.alive and h.last_seen < deadline
+                ]
+            for h in stale:
+                # shutdown() (not close()) is what actually wakes a reader
+                # thread blocked in recv with EOF, tripping its death path
+                _shutdown_socket(h.sock)
+
+    def _on_death(self, handle: _WorkerHandle) -> None:
+        with self._lock:
+            if not handle.alive:
+                return
+            handle.alive = False
+            self._workers.pop(handle.wid, None)
+            requests = list(self._requests.values())
+        self.membership.record_leave(handle.wid, time.time())
+        _shutdown_socket(handle.sock)
+        for req in requests:
+            self._redispatch(req, handle.wid)
+
+    def _route_result(
+        self, handle: _WorkerHandle, header: Dict, arrays: Dict
+    ) -> None:
+        rid = header.get("req")
+        with self._lock:
+            req = self._requests.get(rid)
+        if req is None:
+            return  # request already decoded (straggler / duplicate)
+        with req.lock:
+            req.pending.pop(header.get("task"), None)
+        self.membership.record_response(
+            handle.wid, float(header.get("wall_us", 0.0)) / 1e3
+        )
+        if header.get("ok"):
+            req.events.put(("result", int(header["i"]), arrays.get("h")))
+        else:
+            req.events.put(
+                ("error", int(header["i"]), (handle.wid, header.get("err")))
+            )
+
+    # -- introspection -----------------------------------------------------
+
+    def live_workers(self) -> List[int]:
+        with self._lock:
+            return sorted(w for w, h in self._workers.items() if h.alive)
+
+    def worker_caps(self) -> Dict[int, Dict]:
+        with self._lock:
+            return {w: dict(h.caps) for w, h in self._workers.items()}
+
+    def trace(self):
+        """The observed membership history as a real WorkerTrace."""
+        return self.membership.trace()
+
+    def wait_for_workers(self, n: int, timeout: float = 60.0) -> None:
+        deadline = time.time() + timeout
+        with self._joined:
+            while len(self._workers) < n:
+                remaining = deadline - time.time()
+                if remaining <= 0 or not self._joined.wait(remaining):
+                    raise TimeoutError(
+                        f"pool has {len(self._workers)}/{n} workers after "
+                        f"{timeout:.0f}s"
+                    )
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _pick_worker(self, exclude: Tuple[int, ...] = ()) -> _WorkerHandle:
+        with self._lock:
+            live = [
+                h for w, h in sorted(self._workers.items())
+                if h.alive and w not in exclude
+            ]
+            if not live:
+                live = [h for _, h in sorted(self._workers.items()) if h.alive]
+            if not live:
+                raise WorkerDied("pool has no live workers")
+            self._rr += 1
+            return live[self._rr % len(live)]
+
+    def _send_task(
+        self,
+        req: _Request,
+        scheme,
+        i: int,
+        fa: np.ndarray,
+        gb: np.ndarray,
+        exclude: Tuple[int, ...] = (),
+    ) -> int:
+        tried = set(exclude)
+        while True:
+            handle = self._pick_worker(tuple(tried))
+            with self._lock:
+                task = self._next_task
+                self._next_task += 1
+            header = {
+                "type": "task",
+                "req": req.rid,
+                "task": task,
+                "i": i,
+                "ring": {
+                    "p": scheme.ring.p,
+                    "e": scheme.ring.e,
+                    "degrees": list(scheme.ring.degrees),
+                },
+            }
+            # None = auto: each worker decides per its own device/ring
+            # (kernel_auto_enabled on the worker side)
+            header["use_kernel"] = (
+                "auto" if self.use_kernel is None else bool(self.use_kernel)
+            )
+            delay = self.task_delay_ms.get(handle.wid, 0.0)
+            if delay > 0.0:
+                header["delay_ms"] = delay
+            if handle.wid in self.task_fail_wids:
+                header["inject_fail"] = True
+            with req.lock:
+                req.pending[task] = (i, fa, gb, handle.wid)
+            try:
+                handle.send(header, {"fa": fa, "gb": gb})
+                return handle.wid
+            except OSError:
+                # the send found the corpse; retry on another worker (the
+                # death path would skip this task if _on_death already ran)
+                with req.lock:
+                    req.pending.pop(task, None)
+                tried.add(handle.wid)
+                self._on_death(handle)
+
+    def _redispatch(self, req: _Request, dead_wid: int) -> None:
+        """Re-ship the dead worker's unanswered shares to survivors."""
+        with req.lock:
+            if req.done:
+                return
+            orphans = [
+                (task, i, fa, gb)
+                for task, (i, fa, gb, wid) in req.pending.items()
+                if wid == dead_wid
+            ]
+            for task, *_ in orphans:
+                req.pending.pop(task, None)
+        for _, i, fa, gb in orphans:
+            try:
+                self._send_task(req, req.scheme, i, fa, gb,
+                                exclude=(dead_wid,))
+                with req.lock:
+                    req.redispatched += 1
+            except WorkerDied as e:
+                req.events.put(("dead", -1, str(e)))
+                return
+
+    # -- protocol entry point ----------------------------------------------
+
+    def execute(
+        self,
+        scheme,
+        A,
+        B,
+        mask=None,
+        key=None,
+        timeout: Optional[float] = None,
+    ) -> Tuple[np.ndarray, PoolStats]:
+        """Run one coded matmul on the pool; returns (C, PoolStats).
+
+        ``mask`` is the usual (N,)-bool share-liveness vector: masked-out
+        share indices are never dispatched (the test seam for simulating
+        straggler budgets deterministically).  ``key`` feeds the keyed
+        encode of secure schemes — encode runs master-side, so workers
+        only ever see masked shares.
+        """
+        t0 = time.perf_counter()
+        N, R = scheme.N, scheme.R
+        shares = list(range(N))
+        if mask is not None:
+            m = np.asarray(mask, dtype=bool)
+            if len(m) != N:
+                raise ValueError(f"mask has {len(m)} entries, scheme N={N}")
+            shares = [i for i in shares if m[i]]
+        if len(shares) < R:
+            raise NotEnoughResponders(
+                f"{scheme.name}: mask leaves {len(shares)} shares, "
+                f"decode needs R={R}"
+            )
+        encode_at, _ = worker_closures(scheme, keyed=key is not None)
+
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = _Request(rid, R)
+            req.scheme = scheme
+            self._requests[rid] = req
+        deadline = time.perf_counter() + timeout if timeout else None
+        workers_used: List[int] = []
+        try:
+            import jax.numpy as jnp
+
+            for i in shares:
+                if key is None:
+                    fa, gb = encode_at(A, B, jnp.int32(i))
+                else:
+                    fa, gb = encode_at(A, B, jnp.int32(i), key)
+                wid = self._send_task(
+                    req, scheme, i, np.asarray(fa), np.asarray(gb)
+                )
+                workers_used.append(wid)
+
+            got: Dict[int, np.ndarray] = {}
+            errors: Dict[int, int] = {}  # share -> failed compute attempts
+            t_R = None
+            while len(got) < R:
+                wait = None
+                if deadline is not None:
+                    wait = deadline - time.perf_counter()
+                    if wait <= 0:
+                        raise TimeoutError(
+                            f"pool request {rid}: {len(got)}/{R} responses "
+                            f"after {timeout}s"
+                        )
+                try:
+                    kind, i, payload = req.events.get(timeout=wait)
+                except queue.Empty:
+                    raise TimeoutError(
+                        f"pool request {rid}: {len(got)}/{R} responses "
+                        f"after {timeout}s"
+                    ) from None
+                if kind == "result":
+                    got[i] = payload
+                elif kind == "error":
+                    # a compute error is a worker failure, not a request
+                    # failure: retry the share ONCE on a different worker,
+                    # then write it off — the any-R decode only needs R of
+                    # the remaining shares
+                    bad_wid, err = payload
+                    errors[i] = errors.get(i, 0) + 1
+                    healthy = [
+                        s for s in shares
+                        if s in got or errors.get(s, 0) < 2
+                    ]
+                    if len(healthy) < R:
+                        raise RuntimeError(
+                            f"pool request {rid}: share {i} failed "
+                            f"{errors[i]}x and only {len(healthy)} viable "
+                            f"shares remain (R={R}); last error: {err}"
+                        )
+                    if errors[i] < 2 and i not in got:
+                        if key is None:
+                            fa, gb = encode_at(A, B, jnp.int32(i))
+                        else:
+                            fa, gb = encode_at(A, B, jnp.int32(i), key)
+                        self._send_task(
+                            req, scheme, i, np.asarray(fa), np.asarray(gb),
+                            exclude=(bad_wid,),
+                        )
+                else:  # "dead": no live workers remain for a re-dispatch
+                    raise WorkerDied(
+                        f"pool request {rid}: {payload} with {len(got)}/{R} "
+                        f"responses collected"
+                    )
+            t_R = (time.perf_counter() - t0) * 1e3
+            with req.lock:
+                req.done = True
+            C = decode_responses(scheme, got)
+            stats = PoolStats(
+                dispatched=tuple(shares),
+                live_idx=tuple(sorted(got))[:R],
+                workers=tuple(sorted(set(workers_used))),
+                redispatched=req.redispatched,
+                wall_ms=(time.perf_counter() - t0) * 1e3,
+                time_to_R_ms=t_R,
+            )
+            return C, stats
+        finally:
+            with self._lock:
+                self._requests.pop(rid, None)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with self._lock:
+            handles = list(self._workers.values())
+            self._workers.clear()
+        for h in handles:
+            try:
+                h.send({"type": "shutdown"})
+            except OSError:
+                pass
+            _shutdown_socket(h.sock)
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "Master":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# --------------------------------------------------------------------------
+# local pools: master + N worker OS processes in one call
+# --------------------------------------------------------------------------
+
+
+def _worker_env() -> Dict[str, str]:
+    """Child env: inherit, but make sure the repro package resolves."""
+    import repro
+
+    env = dict(os.environ)
+    # repro may be a namespace package (no __init__.py): __path__ still
+    # points at the package directory; its parent is the import root
+    pkg_dir = (repro.__file__ and os.path.dirname(repro.__file__)) or list(
+        repro.__path__
+    )[0]
+    src = os.path.dirname(os.path.abspath(pkg_dir))
+    parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    env["PYTHONPATH"] = os.pathsep.join(dict.fromkeys(parts))
+    return env
+
+
+class LocalPool:
+    """A master plus N local worker OS processes (the zero-config pool).
+
+    Prefers a Unix-domain socket under a private tempdir; falls back to
+    loopback TCP.  ``kill(k)`` SIGKILLs k workers (failure injection);
+    ``close()`` shuts the master down and reaps every child.
+    """
+
+    def __init__(
+        self,
+        workers: int = 4,
+        address: Optional[str] = None,
+        heartbeat_s: float = 0.5,
+        heartbeat_timeout: float = 5.0,
+        use_kernel: Optional[bool] = None,
+        spawn_timeout: float = 120.0,
+    ):
+        self._tmpdir = None
+        if address is None:
+            if hasattr(socket, "AF_UNIX"):
+                self._tmpdir = tempfile.mkdtemp(prefix="repro-pool-")
+                address = f"unix:{os.path.join(self._tmpdir, 'pool.sock')}"
+            else:  # pragma: no cover - non-POSIX fallback
+                address = "tcp:127.0.0.1:0"
+        self.master = Master(
+            address, heartbeat_timeout=heartbeat_timeout, use_kernel=use_kernel
+        )
+        env = _worker_env()
+        # REPRO_POOL_LOG=1 lets worker stderr through for debugging
+        sink = None if os.environ.get("REPRO_POOL_LOG") else subprocess.DEVNULL
+        self.procs: List[subprocess.Popen] = []
+        for i in range(workers):
+            self.procs.append(subprocess.Popen(
+                [
+                    sys.executable, "-m", "repro.dist.worker",
+                    "--connect", self.master.address,
+                    "--name", f"local-{i}",
+                    "--heartbeat", str(heartbeat_s),
+                ],
+                env=env,
+                stdout=subprocess.DEVNULL,
+                stderr=sink,
+            ))
+        try:
+            self.master.wait_for_workers(workers, timeout=spawn_timeout)
+        except TimeoutError:
+            self.close()
+            raise
+
+    @property
+    def address(self) -> str:
+        return self.master.address
+
+    def execute(self, scheme, A, B, mask=None, key=None, timeout=None):
+        return self.master.execute(scheme, A, B, mask=mask, key=key,
+                                   timeout=timeout)
+
+    def kill(self, k: int = 1, sig: int = signal.SIGKILL) -> List[int]:
+        """SIGKILL ``k`` live worker processes; returns the killed pids."""
+        killed = []
+        for proc in self.procs:
+            if len(killed) >= k:
+                break
+            if proc.poll() is None:
+                os.kill(proc.pid, sig)
+                killed.append(proc.pid)
+        for pid in killed:  # reap promptly so poll() reflects reality
+            for proc in self.procs:
+                if proc.pid == pid:
+                    proc.wait(timeout=30)
+        return killed
+
+    def alive_count(self) -> int:
+        return sum(1 for p in self.procs if p.poll() is None)
+
+    def close(self) -> None:
+        self.master.close()
+        for proc in self.procs:
+            if proc.poll() is None:
+                proc.terminate()
+        for proc in self.procs:
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:  # pragma: no cover
+                proc.kill()
+                proc.wait(timeout=10)
+        if self._tmpdir:
+            try:
+                sock = os.path.join(self._tmpdir, "pool.sock")
+                if os.path.exists(sock):
+                    os.unlink(sock)
+                os.rmdir(self._tmpdir)
+            except OSError:  # pragma: no cover
+                pass
+
+    def __enter__(self) -> "LocalPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,86 @@
+"""``coded_matmul(A, B, plan, backend="pool")`` — the one-line switch.
+
+:class:`PoolBackend` adapts a pool master to the execution-backend
+protocol every other backend implements (``__call__(scheme, A, B, mask,
+key)``), so the same planned scheme that runs vmapped in-process runs over
+real worker OS processes by changing one string.  With no explicit pool it
+lazily spawns a shared process-global :class:`~repro.dist.master.LocalPool`
+(``REPRO_POOL_WORKERS`` processes, default 4) on first use and reaps it at
+interpreter exit — `zero-config`, mirroring how ShardMapBackend conjures a
+host-device mesh.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import threading
+from typing import Optional, Union
+
+from .master import LocalPool, Master, PoolStats
+
+__all__ = ["PoolBackend", "default_pool", "shutdown_default_pool"]
+
+_default_pool: Optional[LocalPool] = None
+_default_lock = threading.Lock()
+
+
+def default_pool(workers: Optional[int] = None) -> LocalPool:
+    """The shared process-global LocalPool, spawned on first use.
+
+    ``workers`` defaults to ``REPRO_POOL_WORKERS`` (4).  Pool size is
+    independent of any scheme's N: the master multiplexes share indices
+    round-robin over however many processes exist.
+    """
+    global _default_pool
+    with _default_lock:
+        if _default_pool is None:
+            n = workers or int(os.environ.get("REPRO_POOL_WORKERS", "4"))
+            _default_pool = LocalPool(workers=n)
+            atexit.register(shutdown_default_pool)
+        elif workers is not None and workers != len(_default_pool.procs):
+            import warnings
+
+            warnings.warn(
+                f"default_pool(workers={workers}) reuses the existing "
+                f"{len(_default_pool.procs)}-process shared pool; build a "
+                f"LocalPool(workers={workers}) explicitly for a dedicated "
+                f"pool of that size",
+                stacklevel=2,
+            )
+        return _default_pool
+
+
+def shutdown_default_pool() -> None:
+    global _default_pool
+    with _default_lock:
+        pool, _default_pool = _default_pool, None
+    if pool is not None:
+        pool.close()
+
+
+class PoolBackend:
+    """Execute the coded-matmul protocol on a multi-process worker pool."""
+
+    name = "pool"
+
+    def __init__(
+        self,
+        pool: Union[None, Master, LocalPool] = None,
+        workers: Optional[int] = None,
+        timeout: Optional[float] = None,
+    ):
+        self._pool = pool
+        self._workers = workers
+        self.timeout = timeout
+        self.last_stats: Optional[PoolStats] = None
+
+    @property
+    def master(self) -> Master:
+        pool = self._pool if self._pool is not None else default_pool(self._workers)
+        return pool.master if isinstance(pool, LocalPool) else pool
+
+    def __call__(self, scheme, A, B, mask=None, key=None):
+        C, self.last_stats = self.master.execute(
+            scheme, A, B, mask=mask, key=key, timeout=self.timeout
+        )
+        return C

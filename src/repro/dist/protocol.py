@@ -1,0 +1,183 @@
+"""Framed RPC wire protocol for the worker pool.
+
+A *message* is one header frame followed by zero or more binary array
+frames; every frame is a 4-byte big-endian length prefix + payload.  The
+header is a small dict serialized with msgpack when available (JSON
+otherwise — the first payload byte tags the codec, so mixed installs still
+interoperate) and carries an ``_arrays`` manifest ``[(name, dtype, shape),
+...]`` describing the binary frames that follow.  Arrays travel as raw
+C-order bytes: a share of GR(p^e, D) is a uint32 coefficient tensor, and
+shipping it verbatim keeps the hot path allocation-free on the send side
+and a single ``np.frombuffer`` on the receive side.
+
+Addresses are strings: ``tcp:HOST:PORT`` or ``unix:/path/to.sock`` (the
+latter preferred for local pools — no TCP stack, no port collisions).
+``tcp:HOST:0`` binds an ephemeral port; ``listen`` returns the resolved
+address so workers can be pointed at it.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+try:  # msgpack is the preferred header codec; JSON is the stdlib fallback
+    import msgpack  # type: ignore
+
+    _HAVE_MSGPACK = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    _HAVE_MSGPACK = False
+
+__all__ = [
+    "ProtocolError",
+    "connect",
+    "listen",
+    "parse_address",
+    "recv_msg",
+    "send_msg",
+]
+
+PROTOCOL_VERSION = 1
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 31  # 2 GiB: anything larger is a corrupt length prefix
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame or peer hangup mid-message."""
+
+
+# --------------------------------------------------------------------------
+# framing
+# --------------------------------------------------------------------------
+
+
+def _recvall(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise ProtocolError(f"peer closed mid-frame ({got}/{n} bytes)")
+        got += k
+    return bytes(buf)
+
+
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _LEN.unpack(_recvall(sock, 4))
+    if n > MAX_FRAME:
+        raise ProtocolError(f"frame length {n} exceeds {MAX_FRAME}")
+    return _recvall(sock, n)
+
+
+# --------------------------------------------------------------------------
+# messages
+# --------------------------------------------------------------------------
+
+
+def send_msg(
+    sock: socket.socket,
+    header: Dict,
+    arrays: Optional[Dict[str, np.ndarray]] = None,
+) -> None:
+    """Send one message: header dict + named raw-bytes array payloads."""
+    arrays = arrays or {}
+    manifest = []
+    blobs = []
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        manifest.append([name, arr.dtype.str, list(arr.shape)])
+        # zero-copy send: the length prefix goes out separately and the
+        # array's own buffer feeds sendall directly (no tobytes() copy)
+        blobs.append(memoryview(arr).cast("B"))
+    header = dict(header, _arrays=manifest)
+    if _HAVE_MSGPACK:
+        head = b"M" + msgpack.packb(header, use_bin_type=True)
+    else:
+        head = b"J" + json.dumps(header).encode("utf-8")
+    _send_frame(sock, head)
+    for blob in blobs:
+        sock.sendall(_LEN.pack(blob.nbytes))
+        sock.sendall(blob)
+
+
+def recv_msg(
+    sock: socket.socket,
+) -> Tuple[Dict, Dict[str, np.ndarray]]:
+    """Receive one message: (header dict, {name: np.ndarray})."""
+    head = _recv_frame(sock)
+    if not head:
+        raise ProtocolError("empty header frame")
+    codec, body = head[:1], head[1:]
+    if codec == b"M":
+        if not _HAVE_MSGPACK:  # pragma: no cover - mixed-install edge
+            raise ProtocolError("peer sent msgpack but msgpack is missing")
+        header = msgpack.unpackb(body, raw=False)
+    elif codec == b"J":
+        header = json.loads(body.decode("utf-8"))
+    else:
+        raise ProtocolError(f"unknown header codec {codec!r}")
+    arrays: Dict[str, np.ndarray] = {}
+    for name, dtype, shape in header.pop("_arrays", []):
+        blob = _recv_frame(sock)
+        arrays[name] = np.frombuffer(blob, dtype=np.dtype(dtype)).reshape(
+            tuple(shape)
+        )
+    return header, arrays
+
+
+# --------------------------------------------------------------------------
+# addresses
+# --------------------------------------------------------------------------
+
+
+def parse_address(address: str) -> Tuple[str, object]:
+    """``tcp:HOST:PORT`` -> ("tcp", (host, port)); ``unix:PATH`` ->
+    ("unix", path)."""
+    kind, _, rest = address.partition(":")
+    if kind == "unix" and rest:
+        return "unix", rest
+    if kind == "tcp" and rest:
+        host, _, port = rest.rpartition(":")
+        if host and port.isdigit():
+            return "tcp", (host, int(port))
+    raise ValueError(
+        f"bad address {address!r}; expected tcp:HOST:PORT or unix:/path"
+    )
+
+
+def listen(address: str, backlog: int = 64) -> Tuple[socket.socket, str]:
+    """Bind + listen; returns (socket, resolved address string)."""
+    kind, where = parse_address(address)
+    if kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.bind(where)
+        sock.listen(backlog)
+        return sock, address
+    host, port = where
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind((host, port))
+    sock.listen(backlog)
+    host, port = sock.getsockname()[:2]
+    return sock, f"tcp:{host}:{port}"
+
+
+def connect(address: str, timeout: Optional[float] = None) -> socket.socket:
+    kind, where = parse_address(address)
+    if kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout)
+        sock.connect(where)
+    else:
+        sock = socket.create_connection(where, timeout=timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(None)
+    return sock

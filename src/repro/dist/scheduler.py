@@ -1,0 +1,193 @@
+"""Serving scheduler: one pool, many concurrent coded-matmul requests.
+
+The master multiplexes tasks by request id, so nothing stops N requests
+from being in flight at once — but a serving system needs *policy* on top
+of that mechanism: how many requests may be in flight (``max_inflight``
+dispatcher threads), how many may wait (a bounded admission queue —
+``submit`` raises :class:`SchedulerSaturated` instead of buffering
+unboundedly, so the caller can shed load), and how to avoid re-planning
+and re-instantiating a scheme for every request of the same shape (a
+per-spec plan cache keyed by ``(ProblemSpec, objective)``; plans rank with
+the pool's own calibration coefficients when ``benchmarks/calibration.json``
+carries a ``pool`` fit, falling back to ``local``).
+
+Usage::
+
+    pool = LocalPool(workers=8)
+    sched = PoolScheduler(pool.master, max_queue=32, max_inflight=4)
+    fut = sched.submit(A, B, spec=spec)          # non-blocking, may raise
+    C = fut.result()                              # blocks for this request
+    sched.close(); pool.close()
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.cdmm.api import CdmmScheme, ProblemSpec
+from repro.cdmm.planner import plan
+
+__all__ = ["PoolScheduler", "SchedulerSaturated", "SchedulerStats"]
+
+
+class SchedulerSaturated(RuntimeError):
+    """Admission control rejected the request: the bounded queue is full.
+    Callers shed load (retry with backoff, route elsewhere) instead of the
+    scheduler buffering without bound."""
+
+
+@dataclass
+class SchedulerStats:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    failed: int = 0
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def _bump(self, name: str) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + 1)
+
+
+class PoolScheduler:
+    """Bounded-queue admission control + plan cache over one pool master."""
+
+    def __init__(
+        self,
+        master,
+        max_queue: int = 32,
+        max_inflight: int = 4,
+        objective: str = "latency",
+        request_timeout: Optional[float] = None,
+    ):
+        self.master = master
+        self.objective = objective
+        self.request_timeout = request_timeout
+        self.stats = SchedulerStats()
+        self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._plans: Dict[Tuple[ProblemSpec, str], CdmmScheme] = {}
+        self._plans_lock = threading.Lock()
+        self._closed = False
+        self._threads = [
+            threading.Thread(
+                target=self._dispatch_loop, name=f"pool-sched-{i}", daemon=True
+            )
+            for i in range(max_inflight)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- plan cache --------------------------------------------------------
+
+    def scheme_for(self, spec: ProblemSpec) -> CdmmScheme:
+        """The executable scheme serving ``spec`` (planned once, reused for
+        every request of that shape)."""
+        key = (spec, self.objective)
+        with self._plans_lock:
+            scheme = self._plans.get(key)
+        if scheme is not None:
+            self.stats._bump("plan_cache_hits")
+            return scheme
+        self.stats._bump("plan_cache_misses")
+        built = plan(spec, objective=self.objective,
+                     backend="pool").instantiate()
+        with self._plans_lock:
+            # a racing planner for the same spec wins idempotently
+            scheme = self._plans.setdefault(key, built)
+        return scheme
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        A,
+        B,
+        spec: Optional[ProblemSpec] = None,
+        scheme: Optional[CdmmScheme] = None,
+        mask=None,
+        key=None,
+    ) -> Future:
+        """Admit one request; returns a Future of the decoded product.
+
+        Exactly one of ``spec`` (planned + cached) or ``scheme`` (already
+        built) selects the code.  Raises :class:`SchedulerSaturated` when
+        the admission queue is full.
+        """
+        if (spec is None) == (scheme is None):
+            raise ValueError("pass exactly one of spec= or scheme=")
+        if self._closed:
+            raise RuntimeError("scheduler is closed")
+        if scheme is None:
+            scheme = self.scheme_for(spec)
+        fut: Future = Future()
+        try:
+            self._queue.put_nowait((fut, scheme, A, B, mask, key))
+        except queue.Full:
+            self.stats._bump("rejected")
+            raise SchedulerSaturated(
+                f"admission queue full ({self._queue.maxsize} waiting); "
+                f"shed load or raise max_queue"
+            ) from None
+        self.stats._bump("submitted")
+        return fut
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            fut, scheme, A, B, mask, key = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                C, _ = self.master.execute(
+                    scheme, A, B, mask=mask, key=key,
+                    timeout=self.request_timeout,
+                )
+                self.stats._bump("completed")
+                fut.set_result(C)
+            except BaseException as e:
+                self.stats._bump("failed")
+                fut.set_exception(e)
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the dispatchers.  ``drain=True`` serves queued requests
+        first; ``drain=False`` cancels whatever is still waiting."""
+        if self._closed:
+            return
+        self._closed = True
+        if not drain:
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not None:
+                    item[0].cancel()
+        for _ in self._threads:
+            self._queue.put(None)
+        for t in self._threads:
+            t.join(timeout=30)
+        # a submit racing this close can slip an item in behind the
+        # sentinels after the dispatchers exited: cancel the leftovers so
+        # no Future is left forever unresolved
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                item[0].cancel()
+
+    def __enter__(self) -> "PoolScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

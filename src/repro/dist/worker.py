@@ -1,0 +1,204 @@
+"""Worker-process entrypoint: ``python -m repro.dist.worker --connect ADDR``.
+
+On connect the worker sends a ``hello`` capability handshake — device kind
+(``jax.default_backend()``), pid, the ring-arithmetic envelope it can serve
+(the p=2 machine-word fast path plus the general small-modulus path), and
+its autotune-cache coverage (how many tuned block schedules the committed
+cache carries for this device) — then serves ``task`` messages until the
+master says ``shutdown`` or the socket drops.
+
+A task carries the codeword-ring constructor args, a share index and the
+two encoded shares; the worker computes the block product ``h = fa @ gb``
+in that ring (jitted once per ring; routed through the tuned Pallas
+``gr_matmul`` kernel when the master asks for it and the ring is inside the
+kernel envelope) and replies with the raw result bytes.  Workers never see
+the operands A and B, only their own shares — exactly the paper's upload
+model, and what makes the T-private schemes private against the pool.
+
+A daemon thread pushes ``heartbeat`` messages every ``--heartbeat``
+seconds; the master treats a silent worker as dead after a grace window
+and re-dispatches its shares.  ``delay_ms`` in a task header is a
+failure-injection knob (tests/CI sleep a victim worker so SIGKILL lands
+provably mid-compute); it is ignored unless the master sets it.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .protocol import PROTOCOL_VERSION, ProtocolError, connect, recv_msg, send_msg
+
+__all__ = ["WorkerRuntime", "main"]
+
+
+def _capabilities() -> Dict:
+    """The capability handshake payload (device, rings, autotune coverage)."""
+    import jax
+
+    from repro.kernels.autotune import load_cache
+
+    device = jax.default_backend()
+    try:
+        cache = load_cache()
+        prefix = f"{device}|"
+        coverage = sum(1 for k in cache if k.startswith(prefix))
+        entries = len(cache)
+    except Exception:  # a corrupt cache must not keep a worker out of the pool
+        coverage, entries = 0, 0
+    return {
+        "protocol": PROTOCOL_VERSION,
+        "pid": os.getpid(),
+        "device": device,
+        "jax_version": jax.__version__,
+        # ring envelope mirrors Ring.__init__'s overflow discipline
+        "rings": {"p2_max_e": 32, "general_max_q": 1 << 12},
+        "autotune": {"entries": entries, "device_entries": coverage},
+    }
+
+
+class WorkerRuntime:
+    """One worker's serve loop over an established socket."""
+
+    def __init__(
+        self,
+        sock: socket.socket,
+        name: str = "worker",
+        heartbeat_s: float = 1.0,
+    ):
+        self.sock = sock
+        self.name = name
+        self.heartbeat_s = heartbeat_s
+        self._send_lock = threading.Lock()
+        self._stop = threading.Event()
+        # (p, e, degrees, use_kernel) -> (ring, jitted share-product)
+        self._compute: Dict[Tuple, Tuple] = {}
+        self.tasks_done = 0
+
+    # -- ring-matmul closures (jitted once per ring) -----------------------
+
+    def _closure(self, p: int, e: int, degrees: Tuple[int, ...], use_kernel):
+        import jax
+
+        from repro.core.galois import make_ring
+        from repro.kernels import (
+            gr_matmul,
+            kernel_auto_enabled,
+            kernel_supported,
+        )
+
+        key = (p, e, degrees, use_kernel)
+        if key not in self._compute:
+            ring = make_ring(p, e, degrees)
+            # "auto" = kernel wherever it compiles on THIS device (the
+            # worker decides; the master doesn't know worker hardware)
+            use = (
+                kernel_auto_enabled(ring)
+                if use_kernel == "auto" else bool(use_kernel)
+            )
+            if use and kernel_supported(ring):
+                fn = jax.jit(lambda fa, gb: gr_matmul(fa, gb, ring))
+            else:
+                fn = jax.jit(ring.matmul)
+            self._compute[key] = (ring, fn)
+        return self._compute[key]
+
+    # -- messaging ---------------------------------------------------------
+
+    def _send(self, header: Dict, arrays=None) -> None:
+        with self._send_lock:
+            send_msg(self.sock, header, arrays)
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_s):
+            try:
+                self._send({"type": "heartbeat", "t": time.time(),
+                            "tasks_done": self.tasks_done})
+            except OSError:
+                return  # master gone; the main loop notices on recv
+
+    def _handle_task(self, header: Dict, arrays: Dict) -> None:
+        t0 = time.perf_counter()
+        reply = {
+            "type": "result",
+            "req": header["req"],
+            "task": header["task"],
+            "i": header["i"],
+            "ok": True,
+        }
+        out = {}
+        try:
+            delay_ms = float(header.get("delay_ms", 0.0))
+            if delay_ms > 0.0:  # failure-injection knob (see module doc)
+                time.sleep(delay_ms / 1e3)
+            if header.get("inject_fail"):  # error-injection knob: exercises
+                # the master's bounded share-retry path in tests/CI
+                raise RuntimeError("injected worker failure")
+            _, fn = self._closure(
+                int(header["ring"]["p"]),
+                int(header["ring"]["e"]),
+                tuple(int(d) for d in header["ring"]["degrees"]),
+                header.get("use_kernel", "auto"),
+            )
+            h = fn(arrays["fa"], arrays["gb"])
+            out["h"] = np.asarray(h)
+        except Exception as e:  # computation errors surface at the master
+            reply.update(ok=False, err=f"{type(e).__name__}: {e}")
+        reply["wall_us"] = (time.perf_counter() - t0) * 1e6
+        self._send(reply, out)
+        self.tasks_done += 1
+
+    def serve(self) -> int:
+        self._send({"type": "hello", "name": self.name, **_capabilities()})
+        hb = threading.Thread(target=self._heartbeat_loop, daemon=True)
+        hb.start()
+        try:
+            while True:
+                try:
+                    header, arrays = recv_msg(self.sock)
+                except (ProtocolError, OSError):
+                    return 0  # master hung up: clean exit
+                kind = header.get("type")
+                if kind == "task":
+                    self._handle_task(header, arrays)
+                elif kind == "ping":
+                    self._send({"type": "heartbeat", "t": time.time(),
+                                "tasks_done": self.tasks_done})
+                elif kind == "shutdown":
+                    return 0
+                # unknown types are ignored: forward-compatible masters
+        finally:
+            self._stop.set()
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--connect", required=True, metavar="ADDR",
+        help="master address: tcp:HOST:PORT or unix:/path/to.sock",
+    )
+    ap.add_argument("--name", default=f"worker-{os.getpid()}")
+    ap.add_argument(
+        "--heartbeat", type=float, default=1.0, metavar="SECONDS",
+        help="heartbeat push interval (default 1s)",
+    )
+    ap.add_argument(
+        "--connect-timeout", type=float, default=30.0, metavar="SECONDS",
+    )
+    args = ap.parse_args(argv)
+    sock = connect(args.connect, timeout=args.connect_timeout)
+    return WorkerRuntime(sock, args.name, args.heartbeat).serve()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -60,16 +60,19 @@ def greedy_generate(
 
 def coded_matmul_demo(
     N: int = 8, fail: int = 3, size: int = 64, seed: int = 0,
-    backend: str = "local", privacy_t: int = 0,
+    backend: str = "local", privacy_t: int = 0, pool_workers: int = 4,
 ):
     """The paper's serving integration in one function: the planner picks a
     scheme for the problem spec, and the quantized coded matmul survives
     ``fail`` dead workers out of N bit-identically.
 
     ``backend`` selects the execution path for the planned integer scheme:
-    ``"local"`` (sync, vmapped) or ``"elastic"`` (event-driven master that
+    ``"local"`` (sync, vmapped), ``"elastic"`` (event-driven master that
     decodes at the R-th response under a randomized join/slowdown trace —
-    the straggler-tolerant serving mode).
+    the straggler-tolerant serving mode), or ``"pool"`` (a real
+    multi-process worker pool: ``pool_workers`` worker OS processes are
+    spawned, serve the request over sockets, and are shut down on exit —
+    ``repro.dist``'s production-shaped runtime).
 
     ``privacy_t > 0`` serves T-privately: the planner is restricted to the
     secure scheme families, encodes carry masked randomness from a fresh
@@ -113,17 +116,29 @@ def coded_matmul_demo(
     A = scheme.base.random(rng, (size, size))
     B = scheme.base.random(rng, (size, size))
     exec_backend = backend
+    pool = None
     if backend == "elastic":
-        from repro.cdmm import ElasticBackend
-
         trace = sample_trace(
             jax.random.PRNGKey(seed), N, slowdown_prob=0.3
         ).restrict(mask)
+        from repro.cdmm import ElasticBackend
+
         exec_backend = ElasticBackend(trace=trace)
-    C = coded_matmul(A, B, scheme, backend=exec_backend,
-                     mask=None if backend == "elastic" else jnp.asarray(mask),
-                     key=key)
-    C_sync = coded_matmul(A, B, scheme, backend="local", key=key)
+    elif backend == "pool":
+        from repro.dist import LocalPool, PoolBackend
+
+        pool = LocalPool(workers=pool_workers)
+        exec_backend = PoolBackend(pool)
+    try:
+        C = coded_matmul(
+            A, B, scheme, backend=exec_backend,
+            mask=None if backend == "elastic" else jnp.asarray(mask),
+            key=key,
+        )
+        C_sync = coded_matmul(A, B, scheme, backend="local", key=key)
+    finally:
+        if pool is not None:
+            pool.close()  # clean shutdown: reap every worker process
     backend_exact = bool(np.array_equal(np.asarray(C), np.asarray(C_sync)))
     return {
         "scheme": chosen.scheme,
@@ -143,9 +158,16 @@ def main():
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--coded", action="store_true")
     ap.add_argument(
-        "--coded-backend", default="local", choices=["local", "elastic"],
+        "--coded-backend", default="local",
+        choices=["local", "elastic", "pool"],
         help="execution backend for the coded matmul plane (elastic = "
-        "event-driven any-R decode, races past stragglers)",
+        "event-driven any-R decode, races past stragglers; pool = real "
+        "multi-process worker pool over sockets, repro.dist)",
+    )
+    ap.add_argument(
+        "--pool-workers", type=int, default=4, metavar="N",
+        help="worker OS processes to spawn for --coded-backend pool "
+        "(shut down cleanly on exit)",
     )
     ap.add_argument(
         "--privacy-t", type=int, default=0, metavar="T",
@@ -160,7 +182,8 @@ def main():
     print(f"generated tokens ({time.time()-t0:.1f}s):\n{out['generated']}")
     if args.coded:
         demo = coded_matmul_demo(backend=args.coded_backend,
-                                 privacy_t=args.privacy_t)
+                                 privacy_t=args.privacy_t,
+                                 pool_workers=args.pool_workers)
         private = (f" T={demo['privacy_t']}-private"
                    if demo["privacy_t"] else " int8")
         print(

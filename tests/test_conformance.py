@@ -225,6 +225,41 @@ else:  # pragma: no cover - exercised on minimal installs
         pass
 
 
+@pytest.fixture(scope="module")
+def pool_backend():
+    """One real multi-process worker pool shared by the pool sweep."""
+    from repro.dist import LocalPool, PoolBackend
+
+    with LocalPool(workers=4) as p:
+        yield PoolBackend(p)
+
+
+@pytest.mark.parametrize("name", sorted(registered_schemes()))
+def test_conformance_pool_sweep(name, pool_backend):
+    """The multi-process pool backend (repro.dist: real worker OS processes
+    behind sockets) decodes bit-identically to LocalSimBackend for every
+    registered family under a fixed encode key — the distributed runtime's
+    headline conformance property.  The random R-subset mask doubles as the
+    any-R check over real processes; mid-request SIGKILL coverage lives in
+    tests/test_dist.py."""
+    spec, scheme = build_scheme(name)
+    rng = np.random.default_rng(11)
+    A, B, expect = _random_problem(scheme, spec, rng, 1)
+    live = rng.choice(scheme.N, size=scheme.R, replace=False)
+    mask = jnp.asarray(np.isin(np.arange(scheme.N), live))
+    key = jax.random.fold_in(KEY, 11)
+    C_pool = coded_matmul(A, B, scheme, backend=pool_backend, mask=mask,
+                          key=key)
+    C_local = coded_matmul(A, B, scheme, backend="local", mask=mask, key=key)
+    np.testing.assert_array_equal(
+        np.asarray(C_pool), np.asarray(C_local),
+        err_msg=f"{name}: pool != local (live={sorted(int(i) for i in live)})",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(C_pool), expect, err_msg=f"{name}: pool != oracle",
+    )
+
+
 def test_encode_at_matches_master_encode_for_every_family():
     """The at-worker encode (shard_map / elastic dispatch path) agrees with
     the master-side encode share by share, keyed or not."""
