@@ -1,0 +1,116 @@
+"""Serving throughput: coalesced continuous batching vs per-request dispatch.
+
+The acceptance measurement of ``repro.serve``: the same stream of
+concurrent same-shape requests over the same worker pool, served two ways —
+
+  serving_unbatched  PoolScheduler, one single-CDMM job per request
+  serving_batched    ServeScheduler, amortized-planned RMFE batch coalescing
+
+Rows carry requests/s, per-request latency p50/p99 (submit-to-result,
+futures timed individually) and the engine's mean batch fill.  The row's
+``us`` is wall-clock per request across the whole stream — the regression
+gate therefore tracks serving throughput history directly.
+
+Warmup matters more here than in the jit benches: the any-R ``decode_op``
+compiles per live *subset* (up to C(N, R) distinct decoders), so the first
+stream of each mode is a compile storm.  Each mode runs ``WARM_STREAMS``
+full streams to reach the steady state the row claims to measure, then
+takes the median of ``iters`` measured streams.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import emit
+
+WARM_STREAMS = 2  # first stream compiles decode subsets; second settles
+
+
+def _stream(submit, pairs) -> Dict:
+    """Submit every pair at once, record submit->result latency per
+    request and the stream's total wall-clock."""
+    t0 = time.perf_counter()
+    futs = [submit(A, B) for A, B in pairs]
+    done_at: List[float] = []
+    for f in futs:
+        f.result(timeout=600)
+        done_at.append(time.perf_counter() - t0)
+    # result() is collected in submit order, so each request's true
+    # completion is bounded by when its future resolved; with every future
+    # resolved well before the loop reaches it, done_at converges to the
+    # resolution times (the loop only blocks on stragglers)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "lat_s": done_at}
+
+
+def run(full: bool = False) -> None:
+    from repro.cdmm import ProblemSpec
+    from repro.core import make_ring
+    from repro.dist import LocalPool, PoolScheduler
+    from repro.serve import CoalescePolicy, ServeScheduler
+
+    workers = 6
+    requests = 32 if full else 16
+    size = 128 if full else 64
+    iters = 3
+    Z32 = make_ring(2, 32, ())
+    spec = ProblemSpec(
+        t=size, r=size, s=size, n=1, ring=Z32, N=workers,
+        straggler_budget=1,
+    )
+    rng = np.random.default_rng(0)
+    pairs = [
+        (Z32.random(rng, (size, size)), Z32.random(rng, (size, size)))
+        for _ in range(requests)
+    ]
+
+    with LocalPool(workers=workers) as pool:
+        # -- unbatched baseline: PoolScheduler, one job per request -------
+        with PoolScheduler(
+            pool.master, max_queue=requests, max_inflight=4,
+        ) as sched:
+            for _ in range(WARM_STREAMS):
+                _stream(lambda A, B: sched.submit(A, B, spec=spec), pairs)
+            runs = [
+                _stream(lambda A, B: sched.submit(A, B, spec=spec), pairs)
+                for _ in range(iters)
+            ]
+        r = sorted(runs, key=lambda x: x["wall_s"])[len(runs) // 2]
+        lat = np.asarray(r["lat_s"]) * 1e3
+        emit(
+            f"serving_unbatched_{requests}x{size}",
+            r["wall_s"] * 1e6 / requests,
+            rps=round(requests / r["wall_s"], 2),
+            p50_ms=round(float(np.percentile(lat, 50)), 1),
+            p99_ms=round(float(np.percentile(lat, 99)), 1),
+            mean_fill=1.0,
+            workers=workers,
+        )
+
+        # -- coalesced: ServeScheduler, amortized RMFE batching -----------
+        with ServeScheduler(
+            pool.master,
+            CoalescePolicy(target_batch_n=8, max_wait_ms=50.0),
+            max_queue=requests, max_inflight=4, seed=0,
+        ) as sched:
+            for _ in range(WARM_STREAMS):
+                _stream(lambda A, B: sched.submit(A, B, spec=spec), pairs)
+            runs = [
+                _stream(lambda A, B: sched.submit(A, B, spec=spec), pairs)
+                for _ in range(iters)
+            ]
+            snap = sched.stats.snapshot()
+        r = sorted(runs, key=lambda x: x["wall_s"])[len(runs) // 2]
+        lat = np.asarray(r["lat_s"]) * 1e3
+        emit(
+            f"serving_batched_{requests}x{size}",
+            r["wall_s"] * 1e6 / requests,
+            rps=round(requests / r["wall_s"], 2),
+            p50_ms=round(float(np.percentile(lat, 50)), 1),
+            p99_ms=round(float(np.percentile(lat, 99)), 1),
+            mean_fill=round(snap["mean_fill"], 2),
+            workers=workers,
+        )

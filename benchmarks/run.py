@@ -7,6 +7,8 @@
                                  + measured tuned-vs-static block configs
   straggler bench_straggler    — time-to-completion under straggler model
   secure    bench_secure       — T-private threshold/overhead sweep (privacy tax)
+  serving   bench_serving      — requests/s batched (repro.serve coalescing)
+                                 vs unbatched over a real worker pool
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
 ``--json PATH`` additionally writes the rows as machine-readable JSON
@@ -31,7 +33,7 @@ def main() -> None:
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
     )
-    sections = ("figs", "table1", "kernels", "straggler", "secure")
+    sections = ("figs", "table1", "kernels", "straggler", "secure", "serving")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
@@ -52,6 +54,7 @@ def main() -> None:
     from . import (
         bench_kernels,
         bench_secure,
+        bench_serving,
         bench_single_cdmm,
         bench_straggler,
         bench_table1,
@@ -68,6 +71,8 @@ def main() -> None:
         bench_straggler.run(args.full)
     if "secure" in only:
         bench_secure.run(args.full)
+    if "serving" in only:
+        bench_serving.run(args.full)
     if "figs" in only:
         bench_single_cdmm.run(args.full)
     if args.json:

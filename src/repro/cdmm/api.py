@@ -102,6 +102,20 @@ class ProblemSpec:
     straggler_budget: int = 0
     privacy_t: int = 0
 
+    def with_batch(self, n: int) -> "ProblemSpec":
+        """The same per-request problem at batch arity ``n``.
+
+        This is the coalescing seam: a serving engine that groups ``n``
+        concurrent requests of one (t, r, s) shape plans the batched spec
+        ``spec.with_batch(n)`` (objective ``"amortized"``) and lets the
+        ranking decide whether one RMFE-batch job beats ``n`` single jobs.
+        """
+        if n < 1:
+            raise ValueError(f"batch arity must be >= 1, got {n}")
+        from dataclasses import replace
+
+        return replace(self, n=n)
+
     def validate(self) -> None:
         if self.ring is None:
             raise ValueError("ProblemSpec.ring is required")

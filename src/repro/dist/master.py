@@ -85,6 +85,8 @@ class PoolStats:
     redispatched: int  # shares re-shipped after a worker death
     wall_ms: float  # master wall-clock for the call
     time_to_R_ms: float  # wall-clock until the R-th response landed
+    batch: int = 1  # products the scheme packs per codeword (RMFE slots)
+    fill: int = 1  # slots carrying real requests (rest were zero padding)
 
 
 class _WorkerHandle:
@@ -365,6 +367,7 @@ class Master:
         mask=None,
         key=None,
         timeout: Optional[float] = None,
+        batch_fill: Optional[int] = None,
     ) -> Tuple[np.ndarray, PoolStats]:
         """Run one coded matmul on the pool; returns (C, PoolStats).
 
@@ -372,7 +375,9 @@ class Master:
         share indices are never dispatched (the test seam for simulating
         straggler budgets deterministically).  ``key`` feeds the keyed
         encode of secure schemes — encode runs master-side, so workers
-        only ever see masked shares.
+        only ever see masked shares.  ``batch_fill`` is observability from
+        a coalescing caller: how many of the scheme's batch slots carry
+        real requests (the rest are padding), surfaced on PoolStats.
         """
         t0 = time.perf_counter()
         N, R = scheme.N, scheme.R
@@ -473,6 +478,9 @@ class Master:
                 redispatched=req.redispatched,
                 wall_ms=(time.perf_counter() - t0) * 1e3,
                 time_to_R_ms=t_R,
+                batch=int(getattr(scheme, "batch", 1)),
+                fill=(int(batch_fill) if batch_fill is not None
+                      else int(getattr(scheme, "batch", 1))),
             )
             return C, stats
         finally:
@@ -580,9 +588,10 @@ class LocalPool:
     def address(self) -> str:
         return self.master.address
 
-    def execute(self, scheme, A, B, mask=None, key=None, timeout=None):
+    def execute(self, scheme, A, B, mask=None, key=None, timeout=None,
+                batch_fill=None):
         return self.master.execute(scheme, A, B, mask=mask, key=key,
-                                   timeout=timeout)
+                                   timeout=timeout, batch_fill=batch_fill)
 
     def kill(self, k: int = 1, sig: int = signal.SIGKILL) -> List[int]:
         """SIGKILL ``k`` live worker processes; returns the killed pids."""

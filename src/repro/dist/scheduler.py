@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
@@ -45,13 +46,26 @@ class SchedulerStats:
     rejected: int = 0
     completed: int = 0
     failed: int = 0
+    timed_out: int = 0
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock)
 
+    _COUNTERS = (
+        "submitted", "rejected", "completed", "failed", "timed_out",
+        "plan_cache_hits", "plan_cache_misses",
+    )
+
     def _bump(self, name: str) -> None:
         with self._lock:
             setattr(self, name, getattr(self, name) + 1)
+
+    def snapshot(self) -> Dict[str, int]:
+        """A consistent plain-dict copy of every counter, taken under the
+        lock — the fields themselves may tear when read while dispatchers
+        are bumping them, so periodic reporting reads this instead."""
+        with self._lock:
+            return {k: getattr(self, k) for k in self._COUNTERS}
 
 
 class PoolScheduler:
@@ -126,7 +140,9 @@ class PoolScheduler:
             scheme = self.scheme_for(spec)
         fut: Future = Future()
         try:
-            self._queue.put_nowait((fut, scheme, A, B, mask, key))
+            self._queue.put_nowait(
+                (fut, scheme, A, B, mask, key, time.perf_counter())
+            )
         except queue.Full:
             self.stats._bump("rejected")
             raise SchedulerSaturated(
@@ -143,18 +159,35 @@ class PoolScheduler:
             item = self._queue.get()
             if item is None:
                 return
-            fut, scheme, A, B, mask, key = item
+            fut, scheme, A, B, mask, key, t_submit = item
             if not fut.set_running_or_notify_cancel():
                 continue
+            # request_timeout is a deadline from submit(): time spent
+            # waiting in the admission queue draws down the same budget
+            # the pool execution gets, so a saturated scheduler fails
+            # requests at the promised latency instead of stretching it
+            remaining = None
+            if self.request_timeout is not None:
+                remaining = self.request_timeout - (
+                    time.perf_counter() - t_submit
+                )
+                if remaining <= 0:
+                    self.stats._bump("timed_out")
+                    fut.set_exception(TimeoutError(
+                        f"request spent its {self.request_timeout}s budget "
+                        f"in the admission queue before dispatch"
+                    ))
+                    continue
             try:
                 C, _ = self.master.execute(
-                    scheme, A, B, mask=mask, key=key,
-                    timeout=self.request_timeout,
+                    scheme, A, B, mask=mask, key=key, timeout=remaining,
                 )
                 self.stats._bump("completed")
                 fut.set_result(C)
             except BaseException as e:
-                self.stats._bump("failed")
+                self.stats._bump(
+                    "timed_out" if isinstance(e, TimeoutError) else "failed"
+                )
                 fut.set_exception(e)
 
     def close(self, drain: bool = True) -> None:

@@ -151,6 +151,61 @@ def coded_matmul_demo(
     }
 
 
+def batch_serving_demo(
+    requests: int = 32, size: int = 64, pool_workers: int = 6,
+    wait_ms: float = 50.0, target_batch: int = 8, privacy_t: int = 0,
+    stats_every: float = 0.0, seed: int = 0,
+) -> Dict[str, Any]:
+    """Continuous-batching serving in one function: ``requests`` concurrent
+    same-shape matmuls through :class:`repro.serve.ServeScheduler` over a
+    real ``pool_workers``-process pool, coalesced into RMFE batch codewords
+    wherever the planner's ``"amortized"`` objective says one batch job
+    beats per-request dispatch.  ``stats_every > 0`` prints the engine's
+    ``ServeStats.snapshot()`` every that many seconds while requests are
+    in flight.
+    """
+    import json
+
+    from repro.dist import LocalPool
+    from repro.serve import CoalescePolicy, ServeScheduler
+
+    Z32 = make_ring(2, 32, ())
+    spec = ProblemSpec(
+        t=size, r=size, s=size, n=1, ring=Z32, N=pool_workers,
+        straggler_budget=1, privacy_t=privacy_t,
+    )
+    rng = np.random.default_rng(seed)
+    pairs = [
+        (Z32.random(rng, (size, size)), Z32.random(rng, (size, size)))
+        for _ in range(requests)
+    ]
+    with LocalPool(workers=pool_workers) as pool:
+        policy = CoalescePolicy(
+            target_batch_n=target_batch, max_wait_ms=wait_ms
+        )
+        with ServeScheduler(
+            pool.master, policy, max_queue=requests, seed=seed
+        ) as sched:
+            futs = [sched.submit(A, B, spec=spec) for A, B in pairs]
+            if stats_every > 0:
+                while any(not f.done() for f in futs):
+                    time.sleep(stats_every)
+                    snap = sched.stats.snapshot()
+                    print(json.dumps({
+                        k: snap[k] for k in (
+                            "submitted", "completed", "batches",
+                            "mean_fill", "wait_ms_p50", "wait_ms_p99",
+                        )
+                    }))
+            results = [np.asarray(f.result(timeout=600)) for f in futs]
+            snap = sched.stats.snapshot()
+    ok = all(
+        np.array_equal(C, np.asarray(Z32.matmul(A, B)))
+        for C, (A, B) in zip(results, pairs)
+    )
+    return {"bit_identical": ok, "stats": snap}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b", choices=sorted(ARCHS))
@@ -176,10 +231,48 @@ def main():
         "(restricts the planner to the secure scheme families and raises "
         "the recovery threshold to 2uvw + 2T - 1)",
     )
+    ap.add_argument(
+        "--serve", type=int, default=0, metavar="REQUESTS",
+        help="continuous-batching demo: serve this many concurrent "
+        "same-shape coded matmuls through repro.serve, coalescing them "
+        "into RMFE batch codewords where the amortized objective says a "
+        "batch job beats per-request dispatch (0 = off)",
+    )
+    ap.add_argument(
+        "--serve-batch", type=int, default=8, metavar="N",
+        help="--serve policy: max batch arity the amortized planner "
+        "scans when deciding how many requests to coalesce",
+    )
+    ap.add_argument(
+        "--serve-wait-ms", type=float, default=50.0, metavar="MS",
+        help="--serve policy: max time a request waits for batch peers "
+        "before a partial batch is padded and dispatched",
+    )
+    ap.add_argument(
+        "--stats-every", type=float, default=0.0, metavar="SECONDS",
+        help="print the serving engine's stats snapshot (fill, wait "
+        "histogram quantiles, amortized us/request) this often while "
+        "--serve requests are in flight (0 = only the final snapshot)",
+    )
     args = ap.parse_args()
     t0 = time.time()
     out = greedy_generate(args.arch, smoke=args.smoke, gen_len=args.gen_len)
     print(f"generated tokens ({time.time()-t0:.1f}s):\n{out['generated']}")
+    if args.serve > 0:
+        import json
+
+        demo = batch_serving_demo(
+            requests=args.serve, pool_workers=args.pool_workers,
+            wait_ms=args.serve_wait_ms, target_batch=args.serve_batch,
+            privacy_t=args.privacy_t, stats_every=args.stats_every,
+        )
+        s = demo["stats"]
+        print(
+            f"batch serving [{args.serve} requests, {args.pool_workers} "
+            f"workers]: {s['batches']} batch jobs, mean fill "
+            f"{s['mean_fill']:.2f}, bit-identical={demo['bit_identical']}"
+        )
+        print(json.dumps(s, indent=2))
     if args.coded:
         demo = coded_matmul_demo(backend=args.coded_backend,
                                  privacy_t=args.privacy_t,

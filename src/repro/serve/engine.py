@@ -1,0 +1,353 @@
+"""ServeScheduler: continuous batching between admission and the pool.
+
+The paper's batch construction (Thm III.2) multiplies n independent
+products at ~1/n of GCSA's recovery threshold — but it only pays off in a
+service if n *concurrent requests* actually share one codeword.  This
+engine sits where :class:`repro.dist.scheduler.PoolScheduler` sits (bounded
+admission queue over one pool master) and adds the batch dimension:
+
+admission   ``submit(A, B, spec)`` — per-request specs (``spec.n == 1``),
+            bounded queue, :class:`SchedulerSaturated` on overflow;
+planning    per spec, once: scan batch arities 1..``target_batch_n`` under
+            the planner's ``"amortized"`` objective and keep the cheapest
+            per-request configuration — a batched family at some fill
+            (coalesce, cap = the scheme's RMFE pack size) or a single
+            family (per-request dispatch, exactly PoolScheduler behavior);
+coalescing  a :class:`~repro.serve.coalescer.BatchCoalescer` groups
+            same-spec arrivals until the cap fills or the policy's wait
+            budget expires (``max_wait_ms`` / adaptive idle);
+execution   one ``Master.execute`` per batch: members stack on the leading
+            batch axis, a partial final batch zero-pads up to the pack
+            size (zero rows decode to exact zero products over the ring
+            and are sliced off), and each member's Future resolves to its
+            own slice of the decoded batch.
+
+``privacy_t > 0`` specs ride the same path on ``ep_rmfe_secure``: one
+derived key masks the whole batch (a batch IS one codeword), so coalesced
+and sequential execution stay bit-identical under a caller-fixed key.
+
+``request_timeout`` is a *deadline from submit* — queue wait, coalesce
+wait and pool execution all spend the same budget.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cdmm.api import CdmmScheme, ProblemSpec, get_scheme
+from repro.cdmm.planner import plan
+from repro.dist.scheduler import SchedulerSaturated
+
+from .coalescer import BatchCoalescer, CoalescePolicy
+from .stats import ServeStats
+
+__all__ = ["ServeScheduler"]
+
+_WAKE = object()  # internal: queue.get timed out, run the expiry sweep
+
+
+@dataclass
+class _Member:
+    """One admitted request: arrays pinned at submit, resolved by slice."""
+
+    fut: Future
+    A: np.ndarray
+    B: np.ndarray
+    key: Optional[object]
+    t_submit: float
+
+
+@dataclass
+class _SpecEntry:
+    """The serving decision for one ProblemSpec, planned once.
+
+    ``cap > 1``: coalesce up to ``cap`` requests into ``scheme`` (a batched
+    adapter whose pack size is ``cap``).  ``cap == 1``: the amortized
+    ranking found no batch arity that beats per-request dispatch, so
+    ``scheme`` is the best single-product adapter and requests never wait
+    for peers.
+    """
+
+    spec: ProblemSpec
+    scheme: CdmmScheme
+    cap: int
+    label: str
+
+
+class ServeScheduler:
+    """Continuous-batching admission control over one pool master."""
+
+    def __init__(
+        self,
+        master,
+        policy: Optional[CoalescePolicy] = None,
+        max_queue: int = 64,
+        max_inflight: int = 4,
+        objective: str = "amortized",
+        request_timeout: Optional[float] = None,
+        seed: Optional[int] = None,
+    ):
+        self.master = master
+        self.policy = policy or CoalescePolicy()
+        self.policy.validate()
+        self.objective = objective
+        self.request_timeout = request_timeout
+        self.stats = ServeStats()
+        self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._coalescer = BatchCoalescer(self.policy)
+        self._entries: Dict[ProblemSpec, _SpecEntry] = {}
+        self._entries_lock = threading.Lock()
+        self._key_lock = threading.Lock()
+        self._batch_seq = 0
+        import jax.random
+
+        if seed is None:
+            seed = int.from_bytes(os.urandom(4), "little")
+        self._base_key = jax.random.PRNGKey(seed)
+        self._closed = False
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_inflight, thread_name_prefix="serve-exec"
+        )
+        self._thread = threading.Thread(
+            target=self._coalesce_loop, name="serve-coalesce", daemon=True
+        )
+        self._thread.start()
+
+    # -- planning ----------------------------------------------------------
+
+    def entry_for(self, spec: ProblemSpec) -> _SpecEntry:
+        """The (cached) serving decision for ``spec``: scan batch arities
+        under the ``"amortized"`` objective, keep the cheapest per-request
+        configuration, and build its executable scheme once."""
+        with self._entries_lock:
+            entry = self._entries.get(spec)
+        if entry is not None:
+            self.stats.bump("plan_cache_hits")
+            return entry
+        self.stats.bump("plan_cache_misses")
+
+        # fill=1 first: ties go to per-request dispatch (never make a
+        # request wait for peers unless coalescing strictly wins)
+        choices = [(plan(spec, objective=self.objective, backend="pool"), 1)]
+        for f in range(2, self.policy.target_batch_n + 1):
+            try:
+                pf = plan(
+                    spec.with_batch(f), objective=self.objective,
+                    backend="pool",
+                )
+            except ValueError:
+                continue  # no feasible configuration at this arity
+            if get_scheme(pf.best.scheme).batched:
+                choices.append((pf, f))
+        chosen, fill = min(choices, key=lambda c: c[0].best.score)
+        scheme = chosen.instantiate()
+        cap = scheme.batch if fill > 1 else 1
+        entry = _SpecEntry(
+            spec=spec,
+            scheme=scheme,
+            cap=cap,
+            label=f"{scheme.name}[{spec.t}x{spec.r}x{spec.s}]",
+        )
+        with self._entries_lock:
+            # a racing planner for the same spec wins idempotently
+            entry = self._entries.setdefault(spec, entry)
+        return entry
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        A,
+        B,
+        spec: ProblemSpec,
+        key=None,
+    ) -> Future:
+        """Admit one request; returns a Future of this request's product.
+
+        ``spec`` describes the *single* request (``spec.n == 1``) — batch
+        arity is the engine's decision, not the caller's.  Raises
+        :class:`~repro.dist.scheduler.SchedulerSaturated` when the
+        admission queue is full.
+        """
+        if spec.n != 1:
+            raise ValueError(
+                f"serve coalesces per-request specs (n=1), got n={spec.n}; "
+                f"batch arity is the engine's decision"
+            )
+        if self._closed:
+            raise RuntimeError("scheduler is closed")
+        entry = self.entry_for(spec)
+        fut: Future = Future()
+        member = _Member(
+            fut=fut,
+            A=np.asarray(A),
+            B=np.asarray(B),
+            key=key,
+            t_submit=time.perf_counter(),
+        )
+        try:
+            self._queue.put_nowait((entry, member))
+        except queue.Full:
+            self.stats.bump("rejected")
+            raise SchedulerSaturated(
+                f"admission queue full ({self._queue.maxsize} waiting); "
+                f"shed load or raise max_queue"
+            ) from None
+        self.stats.bump("submitted")
+        return fut
+
+    # -- coalescing --------------------------------------------------------
+
+    def _coalesce_loop(self) -> None:
+        while True:
+            wait = self._coalescer.next_wait_s(
+                time.perf_counter(), self._queue.empty()
+            )
+            try:
+                item = self._queue.get(timeout=wait)
+            except queue.Empty:
+                item = _WAKE
+            if item is None:  # close() sentinel: drain buffers and exit
+                for _, items in self._coalescer.flush_all():
+                    self._dispatch([m for _, m in items])
+                return
+            if item is not _WAKE:
+                entry, member = item
+                if entry.cap <= 1:
+                    self._dispatch([(entry, member)])
+                else:
+                    full = self._coalescer.add(
+                        entry.spec, (entry, member), entry.cap,
+                        time.perf_counter(),
+                    )
+                    if full is not None:
+                        self._dispatch(full)
+            for _, items in self._coalescer.due(
+                time.perf_counter(), self._queue.empty()
+            ):
+                self._dispatch(items)
+
+    def _dispatch(self, items: List) -> None:
+        """Hand one batch (list of (entry, member)) to an executor slot."""
+        entry = items[0][0]
+        members = [m for _, m in items]
+        try:
+            self._pool.submit(self._run_batch, entry, members)
+        except RuntimeError as e:  # executor already shut down
+            for m in members:
+                if not m.fut.done():
+                    m.fut.set_exception(e)
+
+    # -- execution ---------------------------------------------------------
+
+    def _batch_key(self, members: List[_Member]):
+        """One key masks the whole batch (it is one codeword): the first
+        caller-provided key wins, else derive a fresh per-batch key."""
+        for m in members:
+            if m.key is not None:
+                return m.key
+        import jax.random
+
+        with self._key_lock:
+            seq = self._batch_seq
+            self._batch_seq += 1
+        return jax.random.fold_in(self._base_key, seq)
+
+    def _run_batch(self, entry: _SpecEntry, members: List[_Member]) -> None:
+        now = time.perf_counter()
+        active = []
+        for m in members:
+            if m.fut.set_running_or_notify_cancel():
+                active.append(m)
+            else:
+                self.stats.bump("cancelled")
+        if self.request_timeout is not None:
+            still = []
+            for m in active:
+                if now - m.t_submit >= self.request_timeout:
+                    self.stats.bump("timed_out")
+                    m.fut.set_exception(TimeoutError(
+                        f"request spent its {self.request_timeout}s budget "
+                        f"waiting (queue + coalesce) before dispatch"
+                    ))
+                else:
+                    still.append(m)
+            active = still
+        if not active:
+            return
+        scheme = entry.scheme
+        fill = len(active)
+        waits_ms = [(now - m.t_submit) * 1e3 for m in active]
+        timeout = None
+        if self.request_timeout is not None:
+            # the earliest member's remaining budget bounds the whole batch
+            timeout = min(
+                m.t_submit + self.request_timeout for m in active
+            ) - now
+        key = None
+        if scheme.privacy_t > 0:
+            key = self._batch_key(active)
+        try:
+            if entry.cap > 1:
+                pad = scheme.batch - fill
+                zA = np.zeros_like(active[0].A)
+                zB = np.zeros_like(active[0].B)
+                As = np.stack([m.A for m in active] + [zA] * pad)
+                Bs = np.stack([m.B for m in active] + [zB] * pad)
+                C, pstats = self.master.execute(
+                    scheme, As, Bs, key=key, timeout=timeout, batch_fill=fill
+                )
+                for j, m in enumerate(active):
+                    m.fut.set_result(np.asarray(C[j]))
+            else:
+                pad = 0
+                m = active[0]
+                C, pstats = self.master.execute(
+                    scheme, m.A, m.B, key=key, timeout=timeout
+                )
+                m.fut.set_result(np.asarray(C))
+            self.stats.bump("completed", fill)
+            self.stats.record_batch(
+                entry.label, fill, pad, pstats.wall_ms, waits_ms
+            )
+        except BaseException as e:
+            self.stats.bump(
+                "timed_out" if isinstance(e, TimeoutError) else "failed",
+                fill,
+            )
+            for m in active:
+                if not m.fut.done():
+                    m.fut.set_exception(e)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain: buffered partial batches execute, then dispatchers stop.
+        Requests admitted after close() raise; stragglers that raced the
+        sentinel into the queue are cancelled."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(None)
+        self._thread.join(timeout=60)
+        self._pool.shutdown(wait=True)
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and item is not _WAKE:
+                item[1].fut.cancel()
+
+    def __enter__(self) -> "ServeScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

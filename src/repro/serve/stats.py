@@ -1,0 +1,141 @@
+"""ServeStats: the observability surface of the continuous-batching engine.
+
+Everything the latency/throughput policy trades off is counted here so the
+trade is inspectable while the engine runs: how full the coalesced batches
+actually are (per-batch fill and padded slots), how long requests waited
+for peers (a fixed-bucket wait-time histogram — admission-to-execution,
+so queue time is never hidden), and what a request effectively costs once
+batch execution is amortized over its fill (``amortized_us_per_request``).
+
+All mutation happens under one lock; :meth:`ServeStats.snapshot` returns a
+plain dict taken under that same lock, safe to read (or JSON-dump) from any
+thread — ``launch/serve.py --stats-every`` prints it periodically, and
+``benchmarks/bench_serving.py`` records it next to the unbatched baseline.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["ServeStats", "WAIT_BUCKETS_MS"]
+
+# upper edges (ms) of the wait-time histogram; the last bucket is open
+WAIT_BUCKETS_MS: Tuple[float, ...] = (
+    0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    math.inf,
+)
+
+RECENT_BATCHES = 64  # bounded per-batch log (spec label, fill, pad, wall)
+
+
+class ServeStats:
+    """Thread-safe counters + histograms for one serving engine."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.failed = 0
+        self.timed_out = 0
+        self.cancelled = 0
+        self.batches = 0
+        self.coalesced_batches = 0  # batches with fill > 1
+        self.total_fill = 0
+        self.total_pad = 0  # RMFE slots padded with zeros (wasted packing)
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        self.exec_wall_ms = 0.0  # summed master wall-clock of batch jobs
+        self.wait_hist = [0] * len(WAIT_BUCKETS_MS)
+        self.recent: "deque" = deque(maxlen=RECENT_BATCHES)
+
+    # -- recording ---------------------------------------------------------
+
+    def bump(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + by)
+
+    def record_batch(
+        self,
+        label: str,
+        fill: int,
+        pad: int,
+        wall_ms: float,
+        waits_ms: Sequence[float],
+    ) -> None:
+        """One executed batch job: ``fill`` requests served, ``pad`` zero
+        slots, master wall-clock, and each member's admission->execute wait."""
+        with self._lock:
+            self.batches += 1
+            if fill > 1:
+                self.coalesced_batches += 1
+            self.total_fill += fill
+            self.total_pad += pad
+            self.exec_wall_ms += wall_ms
+            for w in waits_ms:
+                self.wait_hist[self._bucket(w)] += 1
+            self.recent.append(
+                {"spec": label, "fill": fill, "pad": pad,
+                 "wall_ms": round(wall_ms, 3)}
+            )
+
+    @staticmethod
+    def _bucket(wait_ms: float) -> int:
+        for b, edge in enumerate(WAIT_BUCKETS_MS):
+            if wait_ms <= edge:
+                return b
+        return len(WAIT_BUCKETS_MS) - 1  # pragma: no cover - inf edge
+
+    # -- reading -----------------------------------------------------------
+
+    @staticmethod
+    def _hist_quantile(hist: List[int], q: float) -> Optional[float]:
+        """Upper bucket edge covering quantile ``q`` (None when empty)."""
+        total = sum(hist)
+        if total == 0:
+            return None
+        want = q * total
+        seen = 0
+        for b, count in enumerate(hist):
+            seen += count
+            if seen >= want:
+                edge = WAIT_BUCKETS_MS[b]
+                return edge if math.isfinite(edge) else WAIT_BUCKETS_MS[-2]
+        return WAIT_BUCKETS_MS[-2]  # pragma: no cover
+
+    def snapshot(self) -> Dict:
+        """A plain-dict copy of every counter, taken under the lock, plus
+        the derived serving signals (mean fill, wait quantiles, amortized
+        us/request).  Safe to call from any thread at any time."""
+        with self._lock:
+            counters = {
+                k: getattr(self, k)
+                for k in (
+                    "submitted", "rejected", "completed", "failed",
+                    "timed_out", "cancelled", "batches", "coalesced_batches",
+                    "total_fill", "total_pad", "plan_cache_hits",
+                    "plan_cache_misses",
+                )
+            }
+            hist = list(self.wait_hist)
+            exec_ms = self.exec_wall_ms
+            recent = list(self.recent)
+        counters["exec_wall_ms"] = round(exec_ms, 3)
+        counters["mean_fill"] = (
+            counters["total_fill"] / counters["batches"]
+            if counters["batches"] else 0.0
+        )
+        counters["amortized_us_per_request"] = (
+            exec_ms * 1e3 / counters["total_fill"]
+            if counters["total_fill"] else None
+        )
+        counters["wait_ms_hist"] = {
+            ("inf" if math.isinf(edge) else f"<={edge:g}"): hist[b]
+            for b, edge in enumerate(WAIT_BUCKETS_MS)
+        }
+        counters["wait_ms_p50"] = self._hist_quantile(hist, 0.50)
+        counters["wait_ms_p99"] = self._hist_quantile(hist, 0.99)
+        counters["recent_batches"] = recent
+        return counters
