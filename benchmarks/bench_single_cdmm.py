@@ -187,10 +187,50 @@ def _bench_shard_map_stages(N, schemes, size, spec, A, B, iters):
              backend="shard_map")
 
 
+def _bench_pool_stages(pool, N, schemes, size, spec, A, B, iters):
+    """Stage rows for the multi-process pool backend, with the comm term
+    measured from REAL socket round-trips: ``Master.echo`` bounces a
+    payload sized to the scheme's upload+download volume off a live worker
+    through the negotiated wire codec, so the fitted ``comm`` coefficient
+    prices what pool execution actually pays (framing, codec, kernel
+    socket path) instead of a memcpy proxy.  Encode/decode/compute stages
+    are the same jitted calls the pool master and workers run."""
+    master = pool.master
+    for name, sch in schemes.items():
+        m = sch.ring.D
+        c = sch.costs(spec)
+        encode_at, compute = worker_closures(sch)
+
+        def enc_all(a, b, _enc=encode_at, _n=N):
+            return [_enc(a, b, jnp.int32(i)) for i in range(_n)]
+
+        FA = sch.encode_a(A)
+        GB = sch.encode_b(B)
+        H = sch.worker_compute(FA, GB)
+        dec = sch.decode_op(tuple(range(sch.R)))
+        e_us = timeit(enc_all, A, B, iters=iters)
+        w_us = timeit(compute, FA[0], GB[0], iters=iters)
+        d_us = timeit(dec, H[: sch.R], iters=iters)
+        nbytes = max(int((c.upload + c.download) * WORD), 4)
+        rtts = [master.echo(nbytes)["rtt_s"] for _ in range(max(iters, 2))]
+        c_us = float(np.median(rtts) * 1e6)
+        tag = f"{name}_N{N}_s{size}_pool"
+        emit(f"{tag}_encode", e_us, upload_B=int(c.upload * WORD), m=m,
+             encode_ops=c.encode_ops, backend="pool")
+        emit(f"{tag}_worker", w_us, m=m, worker_ops=c.worker_ops,
+             backend="pool")
+        emit(f"{tag}_decode", d_us, download_B=int(c.download * WORD),
+             decode_ops=c.decode_ops, backend="pool")
+        emit(f"{tag}_comm", c_us, comm_elems=c.upload + c.download,
+             backend="pool")
+
+
 def bench_backends(N: int, uvw, sizes, iters: int = 3):
-    """Per-backend calibration rows (shard_map / elastic), mirroring
+    """Per-backend calibration rows (shard_map / elastic / pool), mirroring
     ``bench_one``'s scheme grid so every backend's coefficients are fitted
     from the same problem family."""
+    from repro.dist import LocalPool, PoolConfig
+
     u, v, w = uvw
     base = make_ring(2, 32, ())
     schemes = {
@@ -199,13 +239,17 @@ def bench_backends(N: int, uvw, sizes, iters: int = 3):
         "ep_rmfe2": EPRMFE2Adapter(base, 2, N, u, v, w),
     }
     rng = np.random.default_rng(0)
-    for size in sizes:
-        t = r = s = size
-        A = base.random(rng, (t, r))
-        B = base.random(rng, (r, s))
-        spec = ProblemSpec(t=t, r=r, s=s, n=1, ring=base, N=N)
-        _bench_elastic_stages(N, schemes, size, spec, A, B, iters)
-        _bench_shard_map_stages(N, schemes, size, spec, A, B, iters)
+    # one real worker pool for the socket-measured comm rows (echo probes
+    # need a live worker, not a full execute, so 2 workers suffice)
+    with LocalPool(config=PoolConfig(workers=2)) as pool:
+        for size in sizes:
+            t = r = s = size
+            A = base.random(rng, (t, r))
+            B = base.random(rng, (r, s))
+            spec = ProblemSpec(t=t, r=r, s=s, n=1, ring=base, N=N)
+            _bench_elastic_stages(N, schemes, size, spec, A, B, iters)
+            _bench_shard_map_stages(N, schemes, size, spec, A, B, iters)
+            _bench_pool_stages(pool, N, schemes, size, spec, A, B, iters)
 
 
 def run(full: bool = False):

@@ -1,0 +1,110 @@
+"""Bytes-on-the-wire: raw vs compressed share transport on a real pool.
+
+Comm-dominated point: Z_{2^16} entries ride uint32 carriers, so bit-packing
+to the ring's true width alone halves the on-wire volume, and zlib framing
+takes more when the shares compress.  Each row is one full coded matmul on
+a live multi-process pool under a pinned transport, recording the pre-codec
+payload bytes (``raw_B``), what actually crossed the sockets (``wire_B``)
+and the time until the R-th response landed — so the bench-history gate
+tracks both the compression ratio and the latency it buys.
+
+Row names carry the transport (``wire_raw_*`` / ``wire_pack_zlib_*``); the
+suffix is ``_roundtrip``, NOT a calibration stage suffix, so these rows
+never pollute the fitted per-stage coefficients (the pool's ``comm``
+coefficient comes from ``bench_single_cdmm``'s echo probes instead).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cdmm import ProblemSpec, plan
+from repro.core import make_ring
+
+from .common import emit
+
+TRANSPORTS = ("raw", "pack", "pack+zlib")
+
+
+def _one(transport: str, size: int, workers: int) -> dict:
+    from repro.dist import LocalPool, PoolConfig
+
+    ring = make_ring(2, 16, ())
+    spec = ProblemSpec(t=size, r=size, s=size, n=1, ring=ring, N=workers,
+                       straggler_budget=1)
+    scheme = plan(spec, objective="threshold").instantiate()
+    rng = np.random.default_rng(0)
+    A = ring.random(rng, (size, size))
+    B = ring.random(rng, (size, size))
+    cfg = PoolConfig(workers=workers, transport=transport)
+    with LocalPool(config=cfg) as pool:
+        pool.execute(scheme, A, B, timeout=300.0)  # warm: workers jit
+        C, st = pool.execute(scheme, A, B, timeout=300.0)
+    oracle = np.asarray(ring.matmul(A, B))
+    assert np.array_equal(np.asarray(C), oracle), (
+        f"pool decode mismatch under transport={transport!r}"
+    )
+    raw = st.raw_bytes_out + st.raw_bytes_in
+    wire = st.bytes_out + st.bytes_in
+    return {
+        "us": st.time_to_R_ms * 1e3,
+        "raw_B": raw,
+        "wire_B": wire,
+        "codecs": "|".join(st.codecs),
+    }
+
+
+def _pool_stage_rows(full: bool):
+    """CI-sized pool stage rows (socket-measured comm via echo probes) so
+    the bench-history gate tracks the pool backend's calibration inputs on
+    every run — the full-size equivalents live in ``bench_single_cdmm``'s
+    figs section, which CI doesn't run.  s=64 is a size figs never uses,
+    so the row names can't collide with a figs-generated history."""
+    from repro.cdmm.api import (
+        EPRMFE1Adapter,
+        EPRMFE2Adapter,
+        PlainCDMMAdapter,
+    )
+    from repro.dist import LocalPool, PoolConfig
+
+    from .bench_single_cdmm import _bench_pool_stages
+
+    N, u, v, w = 8, 2, 2, 1
+    base = make_ring(2, 32, ())
+    schemes = {
+        "ep_plain": PlainCDMMAdapter(base, N, u, v, w),
+        "ep_rmfe1": EPRMFE1Adapter(base, 2, N, u, v, w),
+        "ep_rmfe2": EPRMFE2Adapter(base, 2, N, u, v, w),
+    }
+    rng = np.random.default_rng(0)
+    sizes = (64, 96) if full else (64,)
+    with LocalPool(config=PoolConfig(workers=2)) as pool:
+        for size in sizes:
+            A = base.random(rng, (size, size))
+            B = base.random(rng, (size, size))
+            spec = ProblemSpec(t=size, r=size, s=size, n=1, ring=base, N=N)
+            _bench_pool_stages(pool, N, schemes, size, spec, A, B, iters=2)
+
+
+def run(full: bool = False):
+    size = 192 if full else 96
+    workers = 4
+    results = {}
+    for transport in TRANSPORTS:
+        r = _one(transport, size, workers)
+        results[transport] = r
+        tag = transport.replace("+", "_")
+        emit(f"wire_{tag}_s{size}_roundtrip", r["us"], raw_B=r["raw_B"],
+             wire_B=r["wire_B"], codecs=r["codecs"], backend="pool")
+    # ratio row: on-wire bytes under the raw transport vs the strongest
+    # compressed one, x1000 so the integer-ish metric column stays readable
+    best = results["pack+zlib"]
+    ratio = results["raw"]["wire_B"] / max(best["wire_B"], 1)
+    emit(f"wire_ratio_s{size}", ratio * 1e3, raw_wire_B=results["raw"]["wire_B"],
+         zlib_wire_B=best["wire_B"], backend="pool")
+    print(f"# wire reduction raw->pack+zlib: {ratio:.2f}x "
+          f"({results['raw']['wire_B']} -> {best['wire_B']} B)")
+    _pool_stage_rows(full)
+
+
+if __name__ == "__main__":
+    run()

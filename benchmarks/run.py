@@ -9,6 +9,8 @@
   secure    bench_secure       — T-private threshold/overhead sweep (privacy tax)
   serving   bench_serving      — requests/s batched (repro.serve coalescing)
                                  vs unbatched over a real worker pool
+  wire      bench_wire         — bytes-on-wire raw vs packed/compressed share
+                                 transport + time-to-R on a live pool
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses larger sizes.
 ``--json PATH`` additionally writes the rows as machine-readable JSON
@@ -33,7 +35,8 @@ def main() -> None:
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
     )
-    sections = ("figs", "table1", "kernels", "straggler", "secure", "serving")
+    sections = ("figs", "table1", "kernels", "straggler", "secure",
+                "serving", "wire")
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
@@ -58,6 +61,7 @@ def main() -> None:
         bench_single_cdmm,
         bench_straggler,
         bench_table1,
+        bench_wire,
     )
     from .common import header, write_json
 
@@ -73,6 +77,8 @@ def main() -> None:
         bench_secure.run(args.full)
     if "serving" in only:
         bench_serving.run(args.full)
+    if "wire" in only:
+        bench_wire.run(args.full)
     if "figs" in only:
         bench_single_cdmm.run(args.full)
     if args.json:

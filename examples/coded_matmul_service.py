@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.cdmm import ProblemSpec, ShardMapBackend, coded_matmul, plan
 from repro.core import make_ring, simulate_stragglers
-from repro.dist import LocalPool, PoolScheduler
+from repro.dist import LocalPool, PoolConfig, PoolScheduler
 
 Z32 = make_ring(2, 32, ())
 spec = ProblemSpec(t=64, r=64, s=64, n=2, ring=Z32, N=8, straggler_budget=4)
@@ -55,7 +55,7 @@ print(
     f"(u,v,w)=({p.best.u},{p.best.v},{p.best.w}), N={spec.N} shares, "
     f"R={scheme.R}, ring {scheme.ring}"
 )
-with LocalPool(workers=6) as pool:
+with LocalPool(config=PoolConfig(workers=6, transport="pack+zlib")) as pool:
     with PoolScheduler(pool.master, max_queue=16, max_inflight=3) as sched:
         # warm round so every worker has jitted the codeword-ring matmul
         As, Bs = next(requests(1))

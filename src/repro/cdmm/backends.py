@@ -254,6 +254,7 @@ def coded_matmul(
     backend: Union[None, str, object] = None,
     mask: Optional[jnp.ndarray] = None,
     key: Optional[jax.Array] = None,
+    pool_config=None,
 ) -> jnp.ndarray:
     """Execute a planned coded matmul: ``C = A @ B`` over ``plan.spec.ring``.
 
@@ -268,8 +269,30 @@ def coded_matmul(
     secure (``privacy_t > 0``) schemes — REQUIRED for them, ignored by the
     rest.  The same key yields bit-identical codewords (hence decodes) on
     every backend; privacy requires a fresh key per call.
+
+    ``pool_config`` (a :class:`repro.dist.PoolConfig`) shapes the worker
+    pool when ``backend="pool"``: worker count/hostfile, wire codec and
+    compression, streaming chunk size, timeouts.  The pool it implies is
+    brought up for this call and torn down after — callers that issue many
+    requests should build a ``PoolBackend(config=...)`` (or a pool +
+    ``PoolBackend(pool)``) once and pass it as ``backend`` instead.
     """
     scheme = plan.instantiate() if isinstance(plan, Plan) else plan
+    if pool_config is not None:
+        if not (backend is None or backend == "pool"):
+            raise ValueError(
+                f"pool_config= only applies to backend='pool', "
+                f"got backend={backend!r}"
+            )
+        from repro.dist import PoolBackend
+
+        be = PoolBackend(config=pool_config)
+        try:
+            if key is None:
+                return be(scheme, A, B, mask)
+            return be(scheme, A, B, mask, key=key)
+        finally:
+            be.close()
     be = get_backend(backend)
     if key is None:
         # keep the pre-keyed-encode 4-argument backend protocol working:

@@ -1,14 +1,17 @@
 """Pool master: real workers, heartbeats, death detection, any-R decode.
 
 :class:`Master` listens on a socket, accepts worker registrations (the
-``hello`` capability handshake), and executes coded matmuls against the
-pool: the master encodes per-worker shares with the same jitted
-``encode_*_at`` closures the elastic backend uses, ships each share to a
-live worker process, and fires the LRU-cached any-R ``decode_op`` the
-moment the R-th response lands — through
-:func:`repro.cdmm.elastic.decode_responses`, the exact decode tail of the
-in-process elastic master, so the two paths are bit-identical by
-construction.
+``hello`` capability handshake, which now negotiates a wire codec per
+connection — see :mod:`repro.dist.protocol`), and executes coded matmuls
+against the pool: the master encodes per-worker shares with the same
+jitted ``encode_*_at`` closures the elastic backend uses, ships each
+share to a live worker process (chunked along the contraction axis when
+``stream_chunk_bytes`` says the share is big enough to pipeline — the
+worker accumulates partial products, so transfer and compute overlap),
+and fires the LRU-cached any-R ``decode_op`` the moment the R-th
+response lands — through :func:`repro.cdmm.elastic.decode_responses`,
+the exact decode tail of the in-process elastic master, so the two paths
+are bit-identical by construction.
 
 Failure model.  A worker is dead when its socket drops (SIGKILL, crash,
 network) or its heartbeat goes silent past ``heartbeat_timeout``.  Death
@@ -28,18 +31,25 @@ responses are routed to per-request queues — which is what lets the
 serving scheduler (:mod:`repro.dist.scheduler`) keep several requests in
 flight over one pool.
 
+Bandwidth accounting: every connection counts pre-codec (raw) vs. on-wire
+bytes; per-request totals land on :class:`PoolStats` and cumulative
+totals (plus latency histograms in the shared ``repro.stats`` schema) on
+``Master.stats()``.
+
 :class:`LocalPool` spawns a master plus N ``python -m repro.dist.worker``
 OS processes on a Unix-domain socket (TCP fallback) in one call, with
-``kill()`` for failure injection and clean shutdown on ``close()``.
+``kill()`` for failure injection and clean shutdown on ``close()`` — it
+is the single-host specialization of :func:`repro.dist.launch.launch_pool`
+and accepts the same :class:`~repro.dist.config.PoolConfig`.
 """
 from __future__ import annotations
 
+import math
 import os
 import queue
 import signal
 import socket
 import subprocess
-import sys
 import tempfile
 import threading
 import time
@@ -50,8 +60,10 @@ import numpy as np
 
 from repro.cdmm.elastic import NotEnoughResponders, decode_responses, worker_closures
 from repro.core.straggler import MembershipEvents
+from repro.stats import Histogram
 
-from .protocol import ProtocolError, listen, recv_msg, send_msg
+from .config import Endpoint, PoolConfig, warn_deprecated_once
+from .protocol import Channel, ProtocolError, listen, negotiate
 
 __all__ = ["LocalPool", "Master", "PoolStats", "WorkerDied"]
 
@@ -87,21 +99,31 @@ class PoolStats:
     time_to_R_ms: float  # wall-clock until the R-th response landed
     batch: int = 1  # products the scheme packs per codeword (RMFE slots)
     fill: int = 1  # slots carrying real requests (rest were zero padding)
+    # bandwidth accounting (shared schema: raw = pre-codec payload bytes,
+    # bytes_* = what actually crossed the socket, framing included)
+    raw_bytes_out: int = 0  # share payloads before the wire codec
+    bytes_out: int = 0  # what the master actually sent
+    raw_bytes_in: int = 0  # result payloads before the wire codec
+    bytes_in: int = 0  # what the master actually received
+    codecs: Tuple[str, ...] = ()  # negotiated codecs of the workers used
 
 
 class _WorkerHandle:
-    def __init__(self, wid: int, sock: socket.socket, caps: Dict):
+    def __init__(self, wid: int, chan: Channel, caps: Dict):
         self.wid = wid
-        self.sock = sock
+        self.chan = chan
+        self.sock = chan.sock
         self.caps = caps
+        self.codec = chan.codec
         self.name = caps.get("name", f"worker-{wid}")
         self.alive = True
         self.last_seen = time.time()
         self.send_lock = threading.Lock()
 
-    def send(self, header: Dict, arrays=None) -> None:
+    def send(self, header: Dict, arrays=None,
+             codec: Optional[str] = None) -> Tuple[int, int]:
         with self.send_lock:
-            send_msg(self.sock, header, arrays)
+            return self.chan.send(header, arrays, codec=codec)
 
 
 class _Request:
@@ -116,6 +138,12 @@ class _Request:
         self.pending: Dict[int, Tuple[int, np.ndarray, np.ndarray, int]] = {}
         self.redispatched = 0
         self.done = False
+        # per-request bandwidth accounting (summed into PoolStats)
+        self.raw_out = 0
+        self.wire_out = 0
+        self.raw_in = 0
+        self.wire_in = 0
+        self.codecs: set = set()
 
 
 class Master:
@@ -123,15 +151,30 @@ class Master:
 
     def __init__(
         self,
-        address: str = "tcp:127.0.0.1:0",
-        heartbeat_timeout: float = 5.0,
+        address: Optional[str] = None,
+        heartbeat_timeout: Optional[float] = None,
         use_kernel: Optional[bool] = None,
+        config: Optional[PoolConfig] = None,
     ):
-        self._listener, self.address = listen(address)
-        self.heartbeat_timeout = heartbeat_timeout
+        cfg = config or PoolConfig()
+        if heartbeat_timeout is not None:
+            cfg = cfg.with_(heartbeat_timeout=heartbeat_timeout)
+        if use_kernel is not None:
+            cfg = cfg.with_(use_kernel=use_kernel)
+        if address is not None:
+            cfg = cfg.with_(endpoint=Endpoint.parse(address))
+        self.config = cfg
+        listen_addr = (
+            cfg.endpoint.address if cfg.endpoint else "tcp:127.0.0.1:0"
+        )
+        self._listener, self.address = listen(listen_addr)
+        self.heartbeat_timeout = cfg.heartbeat_timeout
         # None = let each worker auto-select (kernel wherever it compiles on
         # the worker's device); True/False force it pool-wide
-        self.use_kernel = use_kernel
+        self.use_kernel = cfg.use_kernel
+        self.transport = cfg.transport
+        self.compression_level = cfg.compression_level
+        self.stream_chunk_bytes = cfg.stream_chunk_bytes
         self.membership = MembershipEvents()
         self._workers: Dict[int, _WorkerHandle] = {}
         self._requests: Dict[int, _Request] = {}
@@ -140,8 +183,19 @@ class Master:
         self._next_wid = 0
         self._next_rid = 0
         self._next_task = 0
+        self._next_echo = 0
+        self._echo_waiters: Dict[int, Tuple[threading.Event, List]] = {}
         self._rr = 0  # round-robin cursor for share -> worker assignment
         self._closed = False
+        # cumulative accounting (shared repro.stats schema; see stats())
+        self._stats_lock = threading.Lock()
+        self._counters = {
+            "requests": 0, "completed": 0, "failed": 0, "redispatched": 0,
+            "raw_bytes_out": 0, "bytes_out": 0,
+            "raw_bytes_in": 0, "bytes_in": 0,
+        }
+        self._wall_hist = Histogram()
+        self._time_to_R_hist = Histogram()
         # failure injection: per-worker-id compute delay stamped into task
         # headers (tests/CI park a victim's compute so SIGKILL lands mid-task)
         self.task_delay_ms: Dict[int, float] = {}
@@ -171,17 +225,22 @@ class Master:
 
     def _register(self, sock: socket.socket) -> None:
         try:
-            caps, _ = recv_msg(sock)
+            chan = Channel(sock, level=self.compression_level)
+            caps, _, _, _ = chan.recv()
         except (ProtocolError, OSError):
             sock.close()
             return
         if caps.get("type") != "hello":
             sock.close()
             return
+        # per-connection codec: the strongest the peer decodes, or the
+        # pinned transport when both sides support it; a v0 worker that
+        # advertises nothing gets raw frames (full interop)
+        chan.codec = negotiate(caps.get("codecs"), prefer=self.transport)
         with self._lock:
             wid = self._next_wid
             self._next_wid += 1
-            handle = _WorkerHandle(wid, sock, caps)
+            handle = _WorkerHandle(wid, chan, caps)
             self._workers[wid] = handle
             self._joined.notify_all()
         self.membership.record_join(wid, time.time())
@@ -193,10 +252,21 @@ class Master:
     def _reader_loop(self, handle: _WorkerHandle) -> None:
         try:
             while True:
-                header, arrays = recv_msg(handle.sock)
+                header, arrays, raw, wire = handle.chan.recv()
                 handle.last_seen = time.time()
-                if header.get("type") == "result":
-                    self._route_result(handle, header, arrays)
+                kind = header.get("type")
+                if kind == "result":
+                    self._account(raw_bytes_in=raw, bytes_in=wire)
+                    self._route_result(handle, header, arrays, raw, wire)
+                elif kind == "echo_reply":
+                    with self._lock:
+                        waiter = self._echo_waiters.pop(
+                            header.get("seq"), None
+                        )
+                    if waiter is not None:
+                        event, slot = waiter
+                        slot.append((raw, wire))
+                        event.set()
         except (ProtocolError, OSError):
             self._on_death(handle)
 
@@ -227,7 +297,8 @@ class Master:
             self._redispatch(req, handle.wid)
 
     def _route_result(
-        self, handle: _WorkerHandle, header: Dict, arrays: Dict
+        self, handle: _WorkerHandle, header: Dict, arrays: Dict,
+        raw: int = 0, wire: int = 0,
     ) -> None:
         rid = header.get("req")
         with self._lock:
@@ -236,6 +307,8 @@ class Master:
             return  # request already decoded (straggler / duplicate)
         with req.lock:
             req.pending.pop(header.get("task"), None)
+            req.raw_in += raw
+            req.wire_in += wire
         self.membership.record_response(
             handle.wid, float(header.get("wall_us", 0.0)) / 1e3
         )
@@ -256,9 +329,31 @@ class Master:
         with self._lock:
             return {w: dict(h.caps) for w, h in self._workers.items()}
 
+    def worker_codecs(self) -> Dict[int, str]:
+        """Negotiated wire codec per live worker."""
+        with self._lock:
+            return {w: h.codec for w, h in self._workers.items()}
+
     def trace(self):
         """The observed membership history as a real WorkerTrace."""
         return self.membership.trace()
+
+    def _account(self, **deltas: int) -> None:
+        with self._stats_lock:
+            for k, v in deltas.items():
+                self._counters[k] += v
+
+    def stats(self) -> Dict[str, object]:
+        """Cumulative master accounting in the shared ``repro.stats``
+        snapshot schema: counters, ``bytes_in/out`` vs ``raw_bytes_in/out``
+        (on-wire vs pre-codec), and ``wall_ms``/``time_to_R_ms``
+        histograms with p50/p99."""
+        with self._stats_lock:
+            snap: Dict[str, object] = dict(self._counters)
+        snap["workers_live"] = len(self.live_workers())
+        snap.update(self._wall_hist.snapshot("wall_ms"))
+        snap.update(self._time_to_R_hist.snapshot("time_to_R_ms"))
+        return snap
 
     def wait_for_workers(self, n: int, timeout: float = 60.0) -> None:
         deadline = time.time() + timeout
@@ -270,6 +365,47 @@ class Master:
                         f"pool has {len(self._workers)}/{n} workers after "
                         f"{timeout:.0f}s"
                     )
+
+    # -- calibration probe -------------------------------------------------
+
+    def echo(
+        self, nbytes: int, wid: Optional[int] = None,
+        timeout: float = 30.0, codec: Optional[str] = None,
+    ) -> Dict[str, float]:
+        """Time one real round-trip of an ``nbytes`` share-shaped payload
+        to a worker and back (the calibration probe behind the pool
+        backend's measured comm coefficients).  Returns seconds and byte
+        counts: ``{"rtt_s", "raw_bytes", "wire_bytes"}``."""
+        with self._lock:
+            handle = (
+                self._workers.get(wid) if wid is not None
+                else next(iter(sorted(self._workers.items())), (None, None))[1]
+            )
+        if handle is None or not handle.alive:
+            raise WorkerDied("no live worker for echo probe")
+        payload = np.arange(max(1, nbytes // 4), dtype=np.uint32)
+        with self._lock:
+            seq = self._next_echo
+            self._next_echo += 1
+            event, slot = threading.Event(), []
+            self._echo_waiters[seq] = (event, slot)
+        t0 = time.perf_counter()
+        use = handle.codec if codec is None else codec
+        raw, wire = handle.send(
+            {"type": "echo", "seq": seq, "codec": use},
+            {"x": payload}, codec=use,
+        )
+        if not event.wait(timeout):
+            with self._lock:
+                self._echo_waiters.pop(seq, None)
+            raise TimeoutError(f"echo probe {seq} got no reply in {timeout}s")
+        rtt = time.perf_counter() - t0
+        raw_back, wire_back = slot[0]
+        return {
+            "rtt_s": rtt,
+            "raw_bytes": float(raw + raw_back),
+            "wire_bytes": float(wire + wire_back),
+        }
 
     # -- dispatch ----------------------------------------------------------
 
@@ -285,6 +421,23 @@ class Master:
                 raise WorkerDied("pool has no live workers")
             self._rr += 1
             return live[self._rr % len(live)]
+
+    def _stream_chunks(self, fa: np.ndarray, gb: np.ndarray) -> int:
+        """How many chunks to pipeline this share in (1 = single message).
+        Only 3-D planar block shares with a shared contraction axis are
+        chunkable: ``fa (t,r,D) @ gb (r,s,D)`` splits along r exactly."""
+        if self.stream_chunk_bytes <= 0:
+            return 1
+        if (
+            getattr(fa, "ndim", 0) != 3 or getattr(gb, "ndim", 0) != 3
+            or fa.shape[1] != gb.shape[0]
+        ):
+            return 1
+        r = int(fa.shape[1])
+        total = int(fa.nbytes) + int(gb.nbytes)
+        if total <= self.stream_chunk_bytes:
+            return 1
+        return max(1, min(r, math.ceil(total / self.stream_chunk_bytes)))
 
     def _send_task(
         self,
@@ -306,6 +459,7 @@ class Master:
                 "req": req.rid,
                 "task": task,
                 "i": i,
+                "codec": handle.codec,
                 "ring": {
                     "p": scheme.ring.p,
                     "e": scheme.ring.e,
@@ -325,7 +479,41 @@ class Master:
             with req.lock:
                 req.pending[task] = (i, fa, gb, handle.wid)
             try:
-                handle.send(header, {"fa": fa, "gb": gb})
+                chunks = self._stream_chunks(fa, gb)
+                if chunks <= 1:
+                    raw, wire = handle.send(header, {"fa": fa, "gb": gb})
+                else:
+                    # pipelined transfer: ship the share as contraction-
+                    # axis slices so the worker computes partial products
+                    # while later chunks are still in flight.  The header
+                    # must promise exactly the number of chunk messages
+                    # that follow (ceil(r/step) can undershoot the chunk
+                    # target when step rounds up), or the worker's
+                    # accumulator waits forever on a phantom chunk.
+                    r = fa.shape[1]
+                    step = math.ceil(r / chunks)
+                    starts = range(0, r, step)
+                    header["stream"] = len(starts)
+                    raw, wire = handle.send(header)
+                    for seq, lo in enumerate(starts):
+                        hi = min(lo + step, r)
+                        craw, cwire = handle.send(
+                            {
+                                "type": "chunk", "req": req.rid,
+                                "task": task, "seq": seq,
+                            },
+                            {
+                                "fa": np.ascontiguousarray(fa[:, lo:hi, :]),
+                                "gb": np.ascontiguousarray(gb[lo:hi, :, :]),
+                            },
+                        )
+                        raw += craw
+                        wire += cwire
+                with req.lock:
+                    req.raw_out += raw
+                    req.wire_out += wire
+                    req.codecs.add(handle.codec)
+                self._account(raw_bytes_out=raw, bytes_out=wire)
                 return handle.wid
             except OSError:
                 # the send found the corpse; retry on another worker (the
@@ -353,6 +541,7 @@ class Master:
                                 exclude=(dead_wid,))
                 with req.lock:
                     req.redispatched += 1
+                self._account(redispatched=1)
             except WorkerDied as e:
                 req.events.put(("dead", -1, str(e)))
                 return
@@ -400,8 +589,10 @@ class Master:
             req = _Request(rid, R)
             req.scheme = scheme
             self._requests[rid] = req
+        self._account(requests=1)
         deadline = time.perf_counter() + timeout if timeout else None
         workers_used: List[int] = []
+        ok = False
         try:
             import jax.numpy as jnp
 
@@ -471,19 +662,31 @@ class Master:
             with req.lock:
                 req.done = True
             C = decode_responses(scheme, got)
+            wall_ms = (time.perf_counter() - t0) * 1e3
             stats = PoolStats(
                 dispatched=tuple(shares),
                 live_idx=tuple(sorted(got))[:R],
                 workers=tuple(sorted(set(workers_used))),
                 redispatched=req.redispatched,
-                wall_ms=(time.perf_counter() - t0) * 1e3,
+                wall_ms=wall_ms,
                 time_to_R_ms=t_R,
                 batch=int(getattr(scheme, "batch", 1)),
                 fill=(int(batch_fill) if batch_fill is not None
                       else int(getattr(scheme, "batch", 1))),
+                raw_bytes_out=req.raw_out,
+                bytes_out=req.wire_out,
+                raw_bytes_in=req.raw_in,
+                bytes_in=req.wire_in,
+                codecs=tuple(sorted(req.codecs)),
             )
+            ok = True
+            self._account(completed=1)
+            self._wall_hist.observe(wall_ms)
+            self._time_to_R_hist.observe(t_R)
             return C, stats
         finally:
+            if not ok:
+                self._account(failed=1)
             with self._lock:
                 self._requests.pop(rid, None)
 
@@ -535,51 +738,73 @@ def _worker_env() -> Dict[str, str]:
     return env
 
 
+_LEGACY_POOL_ARGS = (
+    "workers", "address", "heartbeat_s", "heartbeat_timeout", "use_kernel",
+    "spawn_timeout",
+)
+
+
 class LocalPool:
     """A master plus N local worker OS processes (the zero-config pool).
 
-    Prefers a Unix-domain socket under a private tempdir; falls back to
-    loopback TCP.  ``kill(k)`` SIGKILLs k workers (failure injection);
-    ``close()`` shuts the master down and reaps every child.
+    The single-host specialization of the launcher
+    (:func:`repro.dist.launch.launch_pool`): prefers a Unix-domain socket
+    under a private tempdir, falls back to loopback TCP.  ``kill(k)``
+    SIGKILLs k workers (failure injection); ``close()`` shuts the master
+    down and reaps every child.
+
+    Preferred construction is ``LocalPool(config=PoolConfig(...))``;
+    keyword arguments (``workers=``, ``address=``, ...) remain supported
+    and override the config.  Positional arguments are deprecated (one
+    ``DeprecationWarning`` per process) but keep working.
     """
 
-    def __init__(
-        self,
-        workers: int = 4,
-        address: Optional[str] = None,
-        heartbeat_s: float = 0.5,
-        heartbeat_timeout: float = 5.0,
-        use_kernel: Optional[bool] = None,
-        spawn_timeout: float = 120.0,
-    ):
+    def __init__(self, *args, config: Optional[PoolConfig] = None, **kwargs):
+        if args:
+            warn_deprecated_once(
+                "LocalPool-positional",
+                "positional LocalPool arguments are deprecated; pass "
+                "LocalPool(config=PoolConfig(workers=...)) or keyword "
+                "arguments",
+            )
+            for name, val in zip(_LEGACY_POOL_ARGS, args):
+                if name in kwargs:
+                    raise TypeError(
+                        f"LocalPool got multiple values for {name!r}"
+                    )
+                kwargs[name] = val
+        unknown = set(kwargs) - set(_LEGACY_POOL_ARGS)
+        if unknown:
+            raise TypeError(f"LocalPool got unexpected {sorted(unknown)}")
+        cfg = config or PoolConfig()
+        if "address" in kwargs and kwargs["address"] is not None:
+            cfg = cfg.with_(endpoint=Endpoint.parse(kwargs["address"]))
+        for name in ("workers", "heartbeat_s", "heartbeat_timeout",
+                     "use_kernel", "spawn_timeout"):
+            if name in kwargs:
+                cfg = cfg.with_(**{name: kwargs[name]})
+        self.config = cfg
         self._tmpdir = None
-        if address is None:
+        if cfg.endpoint is None:
             if hasattr(socket, "AF_UNIX"):
                 self._tmpdir = tempfile.mkdtemp(prefix="repro-pool-")
-                address = f"unix:{os.path.join(self._tmpdir, 'pool.sock')}"
+                cfg = cfg.with_(endpoint=Endpoint.unix(
+                    os.path.join(self._tmpdir, "pool.sock")
+                ))
             else:  # pragma: no cover - non-POSIX fallback
-                address = "tcp:127.0.0.1:0"
-        self.master = Master(
-            address, heartbeat_timeout=heartbeat_timeout, use_kernel=use_kernel
+                cfg = cfg.with_(endpoint=Endpoint.tcp("127.0.0.1", 0))
+        self.master = Master(config=cfg)
+        # the launcher owns process spawning; LocalPool is its local case
+        from .launch import spawn_local_workers
+
+        self.procs: List[subprocess.Popen] = spawn_local_workers(
+            self.master.address, cfg.workers,
+            heartbeat_s=cfg.heartbeat_s, name_prefix="local",
         )
-        env = _worker_env()
-        # REPRO_POOL_LOG=1 lets worker stderr through for debugging
-        sink = None if os.environ.get("REPRO_POOL_LOG") else subprocess.DEVNULL
-        self.procs: List[subprocess.Popen] = []
-        for i in range(workers):
-            self.procs.append(subprocess.Popen(
-                [
-                    sys.executable, "-m", "repro.dist.worker",
-                    "--connect", self.master.address,
-                    "--name", f"local-{i}",
-                    "--heartbeat", str(heartbeat_s),
-                ],
-                env=env,
-                stdout=subprocess.DEVNULL,
-                stderr=sink,
-            ))
         try:
-            self.master.wait_for_workers(workers, timeout=spawn_timeout)
+            self.master.wait_for_workers(
+                cfg.workers, timeout=cfg.spawn_timeout
+            )
         except TimeoutError:
             self.close()
             raise
@@ -592,6 +817,10 @@ class LocalPool:
                 batch_fill=None):
         return self.master.execute(scheme, A, B, mask=mask, key=key,
                                    timeout=timeout, batch_fill=batch_fill)
+
+    def stats(self) -> Dict[str, object]:
+        """Cumulative pool accounting (shared repro.stats schema)."""
+        return self.master.stats()
 
     def kill(self, k: int = 1, sig: int = signal.SIGKILL) -> List[int]:
         """SIGKILL ``k`` live worker processes; returns the killed pids."""

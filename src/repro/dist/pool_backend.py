@@ -5,17 +5,20 @@ protocol every other backend implements (``__call__(scheme, A, B, mask,
 key)``), so the same planned scheme that runs vmapped in-process runs over
 real worker OS processes by changing one string.  With no explicit pool it
 lazily spawns a shared process-global :class:`~repro.dist.master.LocalPool`
-(``REPRO_POOL_WORKERS`` processes, default 4) on first use and reaps it at
-interpreter exit — `zero-config`, mirroring how ShardMapBackend conjures a
-host-device mesh.
+on first use and reaps it at interpreter exit — `zero-config`, mirroring
+how ShardMapBackend conjures a host-device mesh.  Pool shape and transport
+come from a :class:`~repro.dist.config.PoolConfig` (``config=`` here, or
+``coded_matmul(..., pool_config=...)`` one level up); the legacy
+``REPRO_POOL_WORKERS`` env var still works through
+``PoolConfig.from_env``'s deprecation shim.
 """
 from __future__ import annotations
 
 import atexit
-import os
 import threading
 from typing import Optional, Union
 
+from .config import PoolConfig
 from .master import LocalPool, Master, PoolStats
 
 __all__ = ["PoolBackend", "default_pool", "shutdown_default_pool"]
@@ -24,18 +27,24 @@ _default_pool: Optional[LocalPool] = None
 _default_lock = threading.Lock()
 
 
-def default_pool(workers: Optional[int] = None) -> LocalPool:
+def default_pool(
+    workers: Optional[int] = None, config: Optional[PoolConfig] = None
+) -> LocalPool:
     """The shared process-global LocalPool, spawned on first use.
 
-    ``workers`` defaults to ``REPRO_POOL_WORKERS`` (4).  Pool size is
-    independent of any scheme's N: the master multiplexes share indices
-    round-robin over however many processes exist.
+    Shape comes from ``config`` (or ``PoolConfig.from_env()``, which
+    honors ``REPRO_DIST_WORKERS`` and — deprecated, one warning — the old
+    ``REPRO_POOL_WORKERS``).  Pool size is independent of any scheme's N:
+    the master multiplexes share indices round-robin over however many
+    processes exist.
     """
     global _default_pool
     with _default_lock:
         if _default_pool is None:
-            n = workers or int(os.environ.get("REPRO_POOL_WORKERS", "4"))
-            _default_pool = LocalPool(workers=n)
+            cfg = config or PoolConfig.from_env()
+            if workers is not None:
+                cfg = cfg.with_(workers=workers)
+            _default_pool = LocalPool(config=cfg)
             atexit.register(shutdown_default_pool)
         elif workers is not None and workers != len(_default_pool.procs):
             import warnings
@@ -59,7 +68,13 @@ def shutdown_default_pool() -> None:
 
 
 class PoolBackend:
-    """Execute the coded-matmul protocol on a multi-process worker pool."""
+    """Execute the coded-matmul protocol on a multi-process worker pool.
+
+    ``pool`` may be an existing Master/LocalPool/HostPool; with
+    ``config=`` and no pool, the backend owns a dedicated pool built from
+    the config (spawned lazily, closed by :meth:`close` or at interpreter
+    exit); with neither, the shared process-global default pool serves.
+    """
 
     name = "pool"
 
@@ -68,16 +83,41 @@ class PoolBackend:
         pool: Union[None, Master, LocalPool] = None,
         workers: Optional[int] = None,
         timeout: Optional[float] = None,
+        config: Optional[PoolConfig] = None,
     ):
         self._pool = pool
         self._workers = workers
-        self.timeout = timeout
+        self._config = config
+        self._owned = None  # the pool this backend spawned from config=
+        self.timeout = (
+            timeout if timeout is not None
+            else (config.request_timeout if config else None)
+        )
         self.last_stats: Optional[PoolStats] = None
 
     @property
     def master(self) -> Master:
-        pool = self._pool if self._pool is not None else default_pool(self._workers)
-        return pool.master if isinstance(pool, LocalPool) else pool
+        pool = self._pool
+        if pool is None and self._config is not None:
+            if self._owned is None:
+                from .launch import launch_pool
+
+                self._owned = launch_pool(self._config)
+                atexit.register(self.close)
+            pool = self._owned
+        if pool is None:
+            pool = default_pool(self._workers)
+        return pool.master if hasattr(pool, "master") else pool
+
+    def stats(self):
+        """Cumulative master accounting (shared repro.stats schema)."""
+        return self.master.stats()
+
+    def close(self) -> None:
+        """Shut down the config-owned pool (no-op for shared/borrowed)."""
+        owned, self._owned = self._owned, None
+        if owned is not None:
+            owned.close()
 
     def __call__(self, scheme, A, B, mask=None, key=None):
         C, self.last_stats = self.master.execute(

@@ -30,6 +30,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.cdmm.api import CdmmScheme, ProblemSpec
 from repro.cdmm.planner import plan
+from repro.stats import Histogram
 
 __all__ = ["PoolScheduler", "SchedulerSaturated", "SchedulerStats"]
 
@@ -49,6 +50,9 @@ class SchedulerStats:
     timed_out: int = 0
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
+    # submit-to-completion latency in the shared repro.stats schema
+    # (request_ms_hist / request_ms_p50 / request_ms_p99 in snapshots)
+    request_ms: Histogram = field(default_factory=Histogram)
     _lock: threading.Lock = field(default_factory=threading.Lock)
 
     _COUNTERS = (
@@ -60,12 +64,17 @@ class SchedulerStats:
         with self._lock:
             setattr(self, name, getattr(self, name) + 1)
 
-    def snapshot(self) -> Dict[str, int]:
-        """A consistent plain-dict copy of every counter, taken under the
-        lock — the fields themselves may tear when read while dispatchers
-        are bumping them, so periodic reporting reads this instead."""
+    def snapshot(self) -> Dict[str, object]:
+        """A consistent copy of every counter (taken under the lock — the
+        fields themselves may tear when read while dispatchers are bumping
+        them) plus the request-latency histogram triple, all in the shared
+        ``repro.stats`` snapshot schema."""
         with self._lock:
-            return {k: getattr(self, k) for k in self._COUNTERS}
+            snap: Dict[str, object] = {
+                k: getattr(self, k) for k in self._COUNTERS
+            }
+        snap.update(self.request_ms.snapshot("request_ms"))
+        return snap
 
 
 class PoolScheduler:
@@ -183,6 +192,9 @@ class PoolScheduler:
                     scheme, A, B, mask=mask, key=key, timeout=remaining,
                 )
                 self.stats._bump("completed")
+                self.stats.request_ms.observe(
+                    (time.perf_counter() - t_submit) * 1e3
+                )
                 fut.set_result(C)
             except BaseException as e:
                 self.stats._bump(

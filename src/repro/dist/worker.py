@@ -2,24 +2,37 @@
 
 On connect the worker sends a ``hello`` capability handshake — device kind
 (``jax.default_backend()``), pid, the ring-arithmetic envelope it can serve
-(the p=2 machine-word fast path plus the general small-modulus path), and
-its autotune-cache coverage (how many tuned block schedules the committed
-cache carries for this device) — then serves ``task`` messages until the
-master says ``shutdown`` or the socket drops.
+(the p=2 machine-word fast path plus the general small-modulus path), the
+wire codecs it can decode (``protocol.supported_codecs()`` — the master
+picks one per connection, so a v0 peer that advertises nothing simply gets
+raw frames), and its autotune-cache coverage — then serves ``task``
+messages until the master says ``shutdown`` or the socket drops.
 
 A task carries the codeword-ring constructor args, a share index and the
 two encoded shares; the worker computes the block product ``h = fa @ gb``
 in that ring (jitted once per ring; routed through the tuned Pallas
 ``gr_matmul`` kernel when the master asks for it and the ring is inside the
-kernel envelope) and replies with the raw result bytes.  Workers never see
-the operands A and B, only their own shares — exactly the paper's upload
-model, and what makes the T-private schemes private against the pool.
+kernel envelope) and replies with the result encoded in the connection's
+codec.  Workers never see the operands A and B, only their own shares —
+exactly the paper's upload model, and what makes the T-private schemes
+private against the pool.
+
+Pipelined streaming: a task header with ``stream: k`` carries no arrays;
+``k`` ``chunk`` messages follow (interleavable with other tasks — chunks
+are keyed by ``(req, task)``), each holding a slice of ``fa``/``gb`` along
+the contraction axis.  The worker computes each chunk's partial product as
+it lands and accumulates ``h = ring.add(h, partial)`` — exact, because
+partial block products over Z_{p^e}/GR are already reduced and addition is
+associative — so master-side encode, socket transfer and worker compute
+overlap instead of serializing.
 
 A daemon thread pushes ``heartbeat`` messages every ``--heartbeat``
 seconds; the master treats a silent worker as dead after a grace window
 and re-dispatches its shares.  ``delay_ms`` in a task header is a
 failure-injection knob (tests/CI sleep a victim worker so SIGKILL lands
-provably mid-compute); it is ignored unless the master sets it.
+provably mid-compute); it is ignored unless the master sets it.  An
+``echo`` message bounces its payload straight back (``echo_reply``) — the
+master's calibration probe for measuring real socket round-trips.
 """
 from __future__ import annotations
 
@@ -33,13 +46,20 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .protocol import PROTOCOL_VERSION, ProtocolError, connect, recv_msg, send_msg
+from .protocol import (
+    PROTOCOL_VERSION,
+    ProtocolError,
+    connect,
+    recv_msg,
+    send_msg,
+    supported_codecs,
+)
 
 __all__ = ["WorkerRuntime", "main"]
 
 
 def _capabilities() -> Dict:
-    """The capability handshake payload (device, rings, autotune coverage)."""
+    """The capability handshake payload (device, rings, codecs, autotune)."""
     import jax
 
     from repro.kernels.autotune import load_cache
@@ -59,8 +79,23 @@ def _capabilities() -> Dict:
         "jax_version": jax.__version__,
         # ring envelope mirrors Ring.__init__'s overflow discipline
         "rings": {"p2_max_e": 32, "general_max_q": 1 << 12},
+        # wire codecs this worker can decode; the master negotiates one
+        # per connection (absent = v0 peer = raw)
+        "codecs": list(supported_codecs()),
+        "streaming": True,
         "autotune": {"entries": entries, "device_entries": coverage},
     }
+
+
+class _StreamState:
+    """Accumulator for one in-flight streamed task."""
+
+    def __init__(self, header: Dict, remaining: int):
+        self.header = header  # the original task header (ring, knobs, ids)
+        self.remaining = remaining
+        self.h: Optional[np.ndarray] = None
+        self.wall_us = 0.0
+        self.failed = False
 
 
 class WorkerRuntime:
@@ -77,8 +112,10 @@ class WorkerRuntime:
         self.heartbeat_s = heartbeat_s
         self._send_lock = threading.Lock()
         self._stop = threading.Event()
-        # (p, e, degrees, use_kernel) -> (ring, jitted share-product)
+        # (p, e, degrees, use_kernel) -> (ring, jitted product, jitted add)
         self._compute: Dict[Tuple, Tuple] = {}
+        # (req, task) -> _StreamState for chunked tasks
+        self._streams: Dict[Tuple[int, int], _StreamState] = {}
         self.tasks_done = 0
 
     # -- ring-matmul closures (jitted once per ring) -----------------------
@@ -106,14 +143,17 @@ class WorkerRuntime:
                 fn = jax.jit(lambda fa, gb: gr_matmul(fa, gb, ring))
             else:
                 fn = jax.jit(ring.matmul)
-            self._compute[key] = (ring, fn)
+            # chunk accumulation: partial products are already reduced, so
+            # ring addition combines them exactly
+            add = jax.jit(ring.add)
+            self._compute[key] = (ring, fn, add)
         return self._compute[key]
 
     # -- messaging ---------------------------------------------------------
 
-    def _send(self, header: Dict, arrays=None) -> None:
+    def _send(self, header: Dict, arrays=None, codec: str = "raw") -> None:
         with self._send_lock:
-            send_msg(self.sock, header, arrays)
+            send_msg(self.sock, header, arrays, codec=codec)
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.wait(self.heartbeat_s):
@@ -123,36 +163,98 @@ class WorkerRuntime:
             except OSError:
                 return  # master gone; the main loop notices on recv
 
-    def _handle_task(self, header: Dict, arrays: Dict) -> None:
-        t0 = time.perf_counter()
+    def _reply(self, header: Dict, ok: bool, h=None, err: str = "",
+               wall_us: float = 0.0) -> None:
         reply = {
             "type": "result",
             "req": header["req"],
             "task": header["task"],
             "i": header["i"],
-            "ok": True,
+            "ok": ok,
+            "wall_us": wall_us,
         }
         out = {}
+        if ok:
+            out["h"] = np.asarray(h)
+        else:
+            reply["err"] = err
+        # results travel in the codec the master stamped on the task —
+        # the negotiated connection codec, raw for v0-style masters
+        self._send(reply, out, codec=header.get("codec", "raw"))
+        self.tasks_done += 1
+
+    def _apply_injection(self, header: Dict) -> None:
+        delay_ms = float(header.get("delay_ms", 0.0))
+        if delay_ms > 0.0:  # failure-injection knob (see module doc)
+            time.sleep(delay_ms / 1e3)
+        if header.get("inject_fail"):  # error-injection knob: exercises
+            # the master's bounded share-retry path in tests/CI
+            raise RuntimeError("injected worker failure")
+
+    def _handle_task(self, header: Dict, arrays: Dict) -> None:
+        stream = int(header.get("stream", 0))
+        if stream > 0:
+            # chunked task: remember the header, accumulate as chunks land
+            key = (header["req"], header["task"])
+            state = _StreamState(header, stream)
+            t0 = time.perf_counter()
+            try:
+                self._apply_injection(header)
+            except Exception as e:
+                state.failed = True
+                self._reply(header, ok=False,
+                            err=f"{type(e).__name__}: {e}",
+                            wall_us=(time.perf_counter() - t0) * 1e6)
+            self._streams[key] = state
+            return
+        t0 = time.perf_counter()
         try:
-            delay_ms = float(header.get("delay_ms", 0.0))
-            if delay_ms > 0.0:  # failure-injection knob (see module doc)
-                time.sleep(delay_ms / 1e3)
-            if header.get("inject_fail"):  # error-injection knob: exercises
-                # the master's bounded share-retry path in tests/CI
-                raise RuntimeError("injected worker failure")
-            _, fn = self._closure(
+            self._apply_injection(header)
+            _, fn, _ = self._closure(
                 int(header["ring"]["p"]),
                 int(header["ring"]["e"]),
                 tuple(int(d) for d in header["ring"]["degrees"]),
                 header.get("use_kernel", "auto"),
             )
             h = fn(arrays["fa"], arrays["gb"])
-            out["h"] = np.asarray(h)
         except Exception as e:  # computation errors surface at the master
-            reply.update(ok=False, err=f"{type(e).__name__}: {e}")
-        reply["wall_us"] = (time.perf_counter() - t0) * 1e6
-        self._send(reply, out)
-        self.tasks_done += 1
+            self._reply(header, ok=False, err=f"{type(e).__name__}: {e}",
+                        wall_us=(time.perf_counter() - t0) * 1e6)
+            return
+        self._reply(header, ok=True, h=h,
+                    wall_us=(time.perf_counter() - t0) * 1e6)
+
+    def _handle_chunk(self, header: Dict, arrays: Dict) -> None:
+        key = (header.get("req"), header.get("task"))
+        state = self._streams.get(key)
+        if state is None:
+            return  # task was re-dispatched elsewhere; drop silently
+        state.remaining -= 1
+        last = state.remaining <= 0
+        if not state.failed:
+            t0 = time.perf_counter()
+            try:
+                _, fn, add = self._closure(
+                    int(state.header["ring"]["p"]),
+                    int(state.header["ring"]["e"]),
+                    tuple(int(d) for d in state.header["ring"]["degrees"]),
+                    state.header.get("use_kernel", "auto"),
+                )
+                part = fn(arrays["fa"], arrays["gb"])
+                state.h = part if state.h is None else add(state.h, part)
+            except Exception as e:
+                state.failed = True
+                state.wall_us += (time.perf_counter() - t0) * 1e6
+                self._reply(state.header, ok=False,
+                            err=f"{type(e).__name__}: {e}",
+                            wall_us=state.wall_us)
+            else:
+                state.wall_us += (time.perf_counter() - t0) * 1e6
+        if last:
+            self._streams.pop(key, None)
+            if not state.failed:
+                self._reply(state.header, ok=True, h=state.h,
+                            wall_us=state.wall_us)
 
     def serve(self) -> int:
         self._send({"type": "hello", "name": self.name, **_capabilities()})
@@ -167,6 +269,14 @@ class WorkerRuntime:
                 kind = header.get("type")
                 if kind == "task":
                     self._handle_task(header, arrays)
+                elif kind == "chunk":
+                    self._handle_chunk(header, arrays)
+                elif kind == "echo":
+                    # calibration probe: bounce the payload straight back
+                    # so the master can time a real round-trip
+                    self._send({"type": "echo_reply",
+                                "seq": header.get("seq")}, arrays,
+                               codec=header.get("codec", "raw"))
                 elif kind == "ping":
                     self._send({"type": "heartbeat", "t": time.time(),
                                 "tasks_done": self.tasks_done})

@@ -125,9 +125,9 @@ def coded_matmul_demo(
 
         exec_backend = ElasticBackend(trace=trace)
     elif backend == "pool":
-        from repro.dist import LocalPool, PoolBackend
+        from repro.dist import LocalPool, PoolBackend, PoolConfig
 
-        pool = LocalPool(workers=pool_workers)
+        pool = LocalPool(config=PoolConfig(workers=pool_workers))
         exec_backend = PoolBackend(pool)
     try:
         C = coded_matmul(
@@ -158,16 +158,20 @@ def batch_serving_demo(
 ) -> Dict[str, Any]:
     """Continuous-batching serving in one function: ``requests`` concurrent
     same-shape matmuls through :class:`repro.serve.ServeScheduler` over a
-    real ``pool_workers``-process pool, coalesced into RMFE batch codewords
-    wherever the planner's ``"amortized"`` objective says one batch job
-    beats per-request dispatch.  ``stats_every > 0`` prints the engine's
-    ``ServeStats.snapshot()`` every that many seconds while requests are
-    in flight.
+    pool the scheduler launches itself from a :class:`PoolConfig`,
+    coalesced into RMFE batch codewords wherever the planner's
+    ``"amortized"`` objective says one batch job beats per-request
+    dispatch.  ``stats_every > 0`` prints a MERGED stats snapshot every
+    that many seconds while requests are in flight: the engine's
+    ``ServeStats`` (fill, wait quantiles) and the pool master's transport
+    accounting (``pool_``-prefixed: bytes on wire vs pre-codec raw,
+    time-to-R quantiles) in one shared-schema dict.
     """
     import json
 
-    from repro.dist import LocalPool
+    from repro.dist import PoolConfig
     from repro.serve import CoalescePolicy, ServeScheduler
+    from repro.stats import merge_snapshots
 
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
@@ -179,26 +183,35 @@ def batch_serving_demo(
         (Z32.random(rng, (size, size)), Z32.random(rng, (size, size)))
         for _ in range(requests)
     ]
-    with LocalPool(workers=pool_workers) as pool:
-        policy = CoalescePolicy(
-            target_batch_n=target_batch, max_wait_ms=wait_ms
-        )
-        with ServeScheduler(
-            pool.master, policy, max_queue=requests, seed=seed
-        ) as sched:
-            futs = [sched.submit(A, B, spec=spec) for A, B in pairs]
-            if stats_every > 0:
-                while any(not f.done() for f in futs):
-                    time.sleep(stats_every)
-                    snap = sched.stats.snapshot()
-                    print(json.dumps({
-                        k: snap[k] for k in (
-                            "submitted", "completed", "batches",
-                            "mean_fill", "wait_ms_p50", "wait_ms_p99",
-                        )
-                    }))
-            results = [np.asarray(f.result(timeout=600)) for f in futs]
-            snap = sched.stats.snapshot()
+    policy = CoalescePolicy(
+        target_batch_n=target_batch, max_wait_ms=wait_ms
+    )
+
+    def merged_stats(sched):
+        pool_snap = {
+            f"pool_{k}": v for k, v in sched.master.stats().items()
+        }
+        return merge_snapshots(sched.stats.snapshot(), pool_snap)
+
+    with ServeScheduler(
+        config=PoolConfig(workers=pool_workers), policy=policy,
+        max_queue=requests, seed=seed,
+    ) as sched:
+        futs = [sched.submit(A, B, spec=spec) for A, B in pairs]
+        if stats_every > 0:
+            while any(not f.done() for f in futs):
+                time.sleep(stats_every)
+                snap = merged_stats(sched)
+                print(json.dumps({
+                    k: snap[k] for k in (
+                        "submitted", "completed", "batches",
+                        "mean_fill", "wait_ms_p50", "wait_ms_p99",
+                        "pool_completed", "pool_bytes_out",
+                        "pool_raw_bytes_out", "pool_time_to_R_ms_p50",
+                    )
+                }))
+        results = [np.asarray(f.result(timeout=600)) for f in futs]
+        snap = merged_stats(sched)
     ok = all(
         np.array_equal(C, np.asarray(Z32.matmul(A, B)))
         for C, (A, B) in zip(results, pairs)

@@ -86,14 +86,27 @@ class ServeScheduler:
 
     def __init__(
         self,
-        master,
+        master=None,
         policy: Optional[CoalescePolicy] = None,
         max_queue: int = 64,
         max_inflight: int = 4,
         objective: str = "amortized",
         request_timeout: Optional[float] = None,
         seed: Optional[int] = None,
+        config=None,
     ):
+        # config= (a repro.dist.PoolConfig) with no master: the engine
+        # owns the pool it serves over — launched here, closed in close().
+        # master=None with no config stays legal: planning entry points
+        # (entry_for) never touch a pool until a request dispatches.
+        self._owned_pool = None
+        if master is None and config is not None:
+            from repro.dist.launch import launch_pool
+
+            self._owned_pool = launch_pool(config)
+            master = self._owned_pool.master
+        elif config is not None and request_timeout is None:
+            request_timeout = config.request_timeout
         self.master = master
         self.policy = policy or CoalescePolicy()
         self.policy.validate()
@@ -345,6 +358,9 @@ class ServeScheduler:
                 break
             if item is not None and item is not _WAKE:
                 item[1].fut.cancel()
+        if self._owned_pool is not None:
+            self._owned_pool.close()
+            self._owned_pool = None
 
     def __enter__(self) -> "ServeScheduler":
         return self

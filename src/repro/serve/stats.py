@@ -7,17 +7,22 @@ for peers (a fixed-bucket wait-time histogram — admission-to-execution,
 so queue time is never hidden), and what a request effectively costs once
 batch execution is amortized over its fill (``amortized_us_per_request``).
 
-All mutation happens under one lock; :meth:`ServeStats.snapshot` returns a
-plain dict taken under that same lock, safe to read (or JSON-dump) from any
-thread — ``launch/serve.py --stats-every`` prints it periodically, and
-``benchmarks/bench_serving.py`` records it next to the unbatched baseline.
+Snapshots follow the shared :mod:`repro.stats` schema — plain counters
+plus the ``wait_ms_hist`` / ``wait_ms_p50`` / ``wait_ms_p99`` triple from
+:class:`repro.stats.Histogram` — so they merge cleanly with the pool
+master's and scheduler's snapshots via :func:`repro.stats.merge_snapshots`
+(``launch/serve.py --stats-every`` prints the merged view, and
+``benchmarks/bench_serving.py`` records it next to the unbatched
+baseline).
 """
 from __future__ import annotations
 
 import math
 import threading
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
+
+from repro.stats import Histogram
 
 __all__ = ["ServeStats", "WAIT_BUCKETS_MS"]
 
@@ -48,7 +53,7 @@ class ServeStats:
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
         self.exec_wall_ms = 0.0  # summed master wall-clock of batch jobs
-        self.wait_hist = [0] * len(WAIT_BUCKETS_MS)
+        self.wait_ms = Histogram(WAIT_BUCKETS_MS)
         self.recent: "deque" = deque(maxlen=RECENT_BATCHES)
 
     # -- recording ---------------------------------------------------------
@@ -74,41 +79,20 @@ class ServeStats:
             self.total_fill += fill
             self.total_pad += pad
             self.exec_wall_ms += wall_ms
-            for w in waits_ms:
-                self.wait_hist[self._bucket(w)] += 1
             self.recent.append(
                 {"spec": label, "fill": fill, "pad": pad,
                  "wall_ms": round(wall_ms, 3)}
             )
-
-    @staticmethod
-    def _bucket(wait_ms: float) -> int:
-        for b, edge in enumerate(WAIT_BUCKETS_MS):
-            if wait_ms <= edge:
-                return b
-        return len(WAIT_BUCKETS_MS) - 1  # pragma: no cover - inf edge
+        for w in waits_ms:
+            self.wait_ms.observe(w)
 
     # -- reading -----------------------------------------------------------
-
-    @staticmethod
-    def _hist_quantile(hist: List[int], q: float) -> Optional[float]:
-        """Upper bucket edge covering quantile ``q`` (None when empty)."""
-        total = sum(hist)
-        if total == 0:
-            return None
-        want = q * total
-        seen = 0
-        for b, count in enumerate(hist):
-            seen += count
-            if seen >= want:
-                edge = WAIT_BUCKETS_MS[b]
-                return edge if math.isfinite(edge) else WAIT_BUCKETS_MS[-2]
-        return WAIT_BUCKETS_MS[-2]  # pragma: no cover
 
     def snapshot(self) -> Dict:
         """A plain-dict copy of every counter, taken under the lock, plus
         the derived serving signals (mean fill, wait quantiles, amortized
-        us/request).  Safe to call from any thread at any time."""
+        us/request) in the shared repro.stats schema.  Safe to call from
+        any thread at any time."""
         with self._lock:
             counters = {
                 k: getattr(self, k)
@@ -119,7 +103,6 @@ class ServeStats:
                     "plan_cache_misses",
                 )
             }
-            hist = list(self.wait_hist)
             exec_ms = self.exec_wall_ms
             recent = list(self.recent)
         counters["exec_wall_ms"] = round(exec_ms, 3)
@@ -131,11 +114,6 @@ class ServeStats:
             exec_ms * 1e3 / counters["total_fill"]
             if counters["total_fill"] else None
         )
-        counters["wait_ms_hist"] = {
-            ("inf" if math.isinf(edge) else f"<={edge:g}"): hist[b]
-            for b, edge in enumerate(WAIT_BUCKETS_MS)
-        }
-        counters["wait_ms_p50"] = self._hist_quantile(hist, 0.50)
-        counters["wait_ms_p99"] = self._hist_quantile(hist, 0.99)
+        counters.update(self.wait_ms.snapshot("wait_ms"))
         counters["recent_batches"] = recent
         return counters

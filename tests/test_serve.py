@@ -136,10 +136,16 @@ def test_scheduler_stats_snapshot_is_plain_dict():
     st._bump("submitted")
     st._bump("timed_out")
     snap = st.snapshot()
-    assert snap == {
+    # counters, plus the shared-schema request-latency histogram triple
+    # (repro.stats: <name>_hist / _p50 / _p99)
+    assert {
+        k: v for k, v in snap.items() if not k.startswith("request_ms")
+    } == {
         "submitted": 1, "rejected": 0, "completed": 0, "failed": 0,
         "timed_out": 1, "plan_cache_hits": 0, "plan_cache_misses": 0,
     }
+    assert set(snap) >= {"request_ms_hist", "request_ms_p50", "request_ms_p99"}
+    assert snap["request_ms_p50"] is None  # nothing observed yet
     # a snapshot is a copy, not a view
     st._bump("submitted")
     assert snap["submitted"] == 1

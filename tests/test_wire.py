@@ -1,0 +1,370 @@
+"""Wire-transport + PoolConfig tests: the PR-7 compression/launcher layer.
+
+Covers, without spawning a pool (cheap, no jax):
+- bit-packing round-trips at every width 1..64 (+ the zero-width case);
+- the codec negotiation matrix, incl. the v0-peer (no ``codecs`` in the
+  hello) and pinned-but-unsupported downgrades to raw;
+- zlib framing on/off and the compressor-inflation guard;
+- the msgpack-missing JSON header fallback;
+- ``Endpoint``/``parse_hostfile``/``PoolConfig`` parsing and validation;
+- the shared ``repro.stats`` histogram/merge schema.
+
+And, against one real multi-process pool (the expensive fixture at the
+bottom): pipelined streaming bit-identicality vs ``LocalSimBackend`` under
+a fixed key — plain and secure schemes — plus the master's raw-vs-wire
+byte accounting and the single-emission deprecation shims.
+"""
+import os
+import socket
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.dist import config as dist_config
+from repro.dist.config import Endpoint, HostSpec, PoolConfig, parse_hostfile
+from repro.dist import protocol
+from repro.dist.protocol import (
+    Channel,
+    negotiate,
+    pack_bits,
+    recv_msg,
+    send_msg,
+    supported_codecs,
+    unpack_bits,
+)
+from repro.stats import Histogram, merge_snapshots, quantile_from_hist
+
+
+# --------------------------------------------------------------------------
+# bit packing
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32, np.uint64])
+def test_pack_bits_round_trips_every_width(dtype):
+    rng = np.random.default_rng(0)
+    max_w = np.dtype(dtype).itemsize * 8
+    for width in range(1, max_w + 1):
+        if width == 64:
+            arr = rng.integers(0, 1 << 63, (5, 7), dtype=np.uint64)
+            arr = (arr << np.uint64(1)) | np.uint64(1)  # force bit 63 high
+        else:
+            hi = 1 << width
+            arr = rng.integers(hi >> 1, hi, (5, 7)).astype(dtype)
+        payload, w = pack_bits(arr)
+        assert w == width, (dtype, width, w)
+        expect = (arr.size * width + 7) // 8
+        # packing emits ceil(bits/8) per 64-bit lane group, allow the
+        # per-row rounding of the packbits layout
+        assert len(payload) <= arr.nbytes or width == max_w
+        back = unpack_bits(payload, w, arr.dtype.str, arr.shape)
+        np.testing.assert_array_equal(back, arr)
+        assert expect <= len(payload) + 8
+
+
+def test_pack_bits_zero_width_and_rejections():
+    z = np.zeros((4, 4), dtype=np.uint32)
+    payload, w = pack_bits(z)
+    assert w == 0 and len(payload) == 0
+    np.testing.assert_array_equal(
+        unpack_bits(payload, 0, z.dtype.str, z.shape), z
+    )
+    with pytest.raises(TypeError):
+        pack_bits(np.zeros(3, dtype=np.int32))  # signed: raw fallback only
+
+
+# --------------------------------------------------------------------------
+# negotiation
+# --------------------------------------------------------------------------
+
+
+def test_negotiate_matrix():
+    ours = supported_codecs()
+    assert ours[-1] == "raw" and "pack" in ours and "pack+zlib" in ours
+    # v0 peer: advertises nothing -> raw frames, full interop
+    assert negotiate(None) == "raw"
+    assert negotiate([]) == "raw"
+    # auto takes the strongest mutual codec
+    assert negotiate(list(ours)) == ours[0]
+    assert negotiate(["pack", "raw"]) == "pack"
+    # pinned and mutual -> pinned; pinned but peer-unsupported -> raw
+    assert negotiate(list(ours), prefer="pack") == "pack"
+    assert negotiate(["raw"], prefer="pack+zlib") == "raw"
+    # peer advertises something we don't speak -> raw
+    assert negotiate(["pack+brotli"]) == "raw"
+
+
+# --------------------------------------------------------------------------
+# framing: codecs, fallbacks, v0 interop
+# --------------------------------------------------------------------------
+
+
+def _pipe():
+    return socket.socketpair()
+
+
+@pytest.mark.parametrize("codec", ["raw", "pack", "pack+zlib"])
+def test_send_recv_round_trip_all_codecs(codec):
+    a, b = _pipe()
+    rng = np.random.default_rng(1)
+    arrays = {
+        "fa": rng.integers(0, 1 << 16, (6, 8, 3), dtype=np.uint32),
+        "gb": rng.integers(0, 1 << 16, (8, 6, 3), dtype=np.uint32),
+        # float sneaks through the codec layer via the raw fallback
+        "f": rng.random((4, 4)).astype(np.float32),
+    }
+    raw, wire = send_msg(a, {"type": "task", "task": 7}, arrays, codec=codec)
+    header, got = recv_msg(b)
+    assert header == {"type": "task", "task": 7}
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(got[k], v)
+    assert raw == sum(v.nbytes for v in arrays.values())
+    if codec == "raw":
+        assert wire > raw  # framing overhead only
+    else:
+        assert wire < raw  # 16 significant bits in 32-bit carriers
+    a.close(), b.close()
+
+
+def test_channel_counts_raw_vs_wire_bytes():
+    a, b = _pipe()
+    chan = Channel(a, codec="pack+zlib")
+    arr = np.arange(4096, dtype=np.uint32) % 251
+    chan.send({"type": "x"}, {"v": arr})
+    header, got = recv_msg(b)
+    np.testing.assert_array_equal(got["v"], arr)
+    assert chan.raw_out == arr.nbytes
+    assert chan.wire_out < chan.raw_out
+    a.close(), b.close()
+
+
+def test_v0_raw_frames_byte_identical_manifest():
+    """codec='raw' must emit the v0 3-element manifest (old peers index
+    entries positionally)."""
+    a, b = _pipe()
+    arr = np.arange(12, dtype=np.uint32).reshape(3, 4)
+    send_msg(a, {"type": "t"}, {"h": arr}, codec="raw")
+    raw = protocol._recv_frame(b)
+    import msgpack
+
+    header = msgpack.unpackb(raw[1:], raw=False)
+    assert header["_arrays"] == [["h", arr.dtype.str, [3, 4]]]
+    a.close(), b.close()
+
+
+def test_json_header_fallback_when_msgpack_missing(monkeypatch):
+    monkeypatch.setattr(protocol, "_HAVE_MSGPACK", False)
+    a, b = _pipe()
+    arr = np.arange(8, dtype=np.uint16)
+    send_msg(a, {"type": "t", "n": 3}, {"h": arr}, codec="pack")
+    header, got = recv_msg(b)
+    assert header == {"type": "t", "n": 3}
+    np.testing.assert_array_equal(got["h"], arr)
+    a.close(), b.close()
+
+
+def test_mixed_codec_handshake_with_v0_peer():
+    """A master negotiating against a v0 hello (no ``codecs`` key) must
+    fall back to raw frames the old worker can parse."""
+    from repro.dist.master import Master
+
+    master = Master(address="tcp:127.0.0.1:0")
+    try:
+        kind, (host, port) = protocol.parse_address(master.address)
+        sock = socket.create_connection((host, port))
+        # a v0 worker's hello: no codecs, no streaming capability
+        send_msg(sock, {"type": "hello", "name": "v0", "pid": 1})
+        master.wait_for_workers(1, timeout=10)
+        assert master.worker_codecs() == {0: "raw"}
+
+        # echo over the raw channel: wire bytes == raw bytes + framing
+        def _serve_echo():
+            header, arrays = recv_msg(sock)
+            send_msg(sock, {"type": "echo_reply", "seq": header["seq"]},
+                     arrays)
+
+        t = threading.Thread(target=_serve_echo, daemon=True)
+        t.start()
+        out = master.echo(1024, timeout=10)
+        assert out["wire_bytes"] >= out["raw_bytes"] > 0
+        sock.close()
+    finally:
+        master.close()
+
+
+# --------------------------------------------------------------------------
+# Endpoint / hostfile / PoolConfig
+# --------------------------------------------------------------------------
+
+
+def test_endpoint_parse_and_str():
+    ep = Endpoint.parse("tcp:10.0.0.4:7777")
+    assert (ep.kind, ep.host, ep.port) == ("tcp", "10.0.0.4", 7777)
+    assert str(ep) == "tcp:10.0.0.4:7777"
+    assert Endpoint.parse(ep) is ep  # idempotent
+    u = Endpoint.parse("unix:/tmp/x.sock")
+    assert (u.kind, u.path) == ("unix", "/tmp/x.sock")
+    with pytest.raises(ValueError):
+        Endpoint.parse("bogus")
+
+
+def test_parse_hostfile_literal_and_errors(tmp_path):
+    text = "# comment\n10.0.0.4 slots=8\n10.0.0.5 slots=2 port=7777\n"
+    hosts = parse_hostfile(text)
+    assert hosts == (
+        HostSpec("10.0.0.4", slots=8),
+        HostSpec("10.0.0.5", slots=2, port=7777),
+    )
+    f = tmp_path / "hosts.txt"
+    f.write_text(text)
+    assert parse_hostfile(str(f)) == hosts
+    with pytest.raises(ValueError):
+        parse_hostfile("")  # empty
+    with pytest.raises(ValueError):
+        parse_hostfile("h1 gpus=4")  # unknown option
+
+
+def test_pool_config_validation_and_overrides():
+    cfg = PoolConfig(workers=3, transport="pack+zlib",
+                     endpoint="tcp:127.0.0.1:0")
+    assert isinstance(cfg.endpoint, Endpoint)
+    assert cfg.total_workers == 3 and not cfg.multi_host
+    assert cfg.with_(workers=5).workers == 5
+    with pytest.raises(ValueError):
+        PoolConfig(transport="gzip9")
+    multi = PoolConfig.from_hostfile("10.0.0.4 slots=2\n10.0.0.5 slots=2")
+    assert multi.total_workers == 4 and multi.multi_host
+    assert multi.endpoint.kind == "tcp"
+
+
+def test_pool_config_from_env_legacy_warns_once(monkeypatch):
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "6")
+    monkeypatch.delenv("REPRO_DIST_WORKERS", raising=False)
+    dist_config._WARNED.discard("REPRO_POOL_WORKERS")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert PoolConfig.from_env().workers == 6
+        assert PoolConfig.from_env().workers == 6
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1 and "REPRO_POOL_WORKERS" in str(dep[0].message)
+    # the modern var wins over the legacy one
+    monkeypatch.setenv("REPRO_DIST_WORKERS", "2")
+    assert PoolConfig.from_env().workers == 2
+
+
+# --------------------------------------------------------------------------
+# shared stats schema
+# --------------------------------------------------------------------------
+
+
+def test_histogram_snapshot_and_quantiles():
+    h = Histogram((1.0, 10.0, float("inf")))
+    assert h.quantile(0.5) is None  # empty
+    for v in (0.5, 0.7, 5.0, 100.0):
+        h.observe(v)
+    snap = h.snapshot("x_ms")
+    assert snap["x_ms_hist"] == {"<=1": 2, "<=10": 1, "inf": 1}
+    assert snap["x_ms_p50"] == 1.0
+    # the open bucket clamps to the largest finite bound (JSON-safe)
+    assert snap["x_ms_p99"] == 10.0
+    assert quantile_from_hist(snap["x_ms_hist"], 0.75) == 10.0
+
+
+def test_merge_snapshots_sums_and_recomputes():
+    a = {"completed": 2, "x_ms_hist": {"<=1": 1, "inf": 0}, "x_ms_p50": 1.0,
+         "label": "a", "flag": False}
+    b = {"completed": 3, "x_ms_hist": {"<=1": 0, "inf": 3}, "x_ms_p50": None,
+         "label": "b", "flag": True, "only_b": 7}
+    m = merge_snapshots(a, b)
+    assert m["completed"] == 5 and m["only_b"] == 7
+    assert m["x_ms_hist"] == {"<=1": 1, "inf": 3}
+    assert m["x_ms_p50"] == 1.0  # clamped to largest finite bound
+    assert m["label"] == "a" and m["flag"] is True
+
+
+# --------------------------------------------------------------------------
+# pipelined streaming vs LocalSimBackend (one real pool, shared)
+# --------------------------------------------------------------------------
+
+
+SIZE = 32
+
+
+@pytest.fixture(scope="module")
+def stream_pool():
+    from repro.dist import LocalPool
+
+    cfg = PoolConfig(workers=3, transport="pack+zlib",
+                     stream_chunk_bytes=2048)
+    with LocalPool(config=cfg) as pool:
+        yield pool
+
+
+def _scheme_for(privacy_t=0):
+    import jax
+
+    from repro.cdmm import ProblemSpec, plan
+    from repro.core import make_ring
+
+    ring = make_ring(2, 16, ())
+    spec = ProblemSpec(t=SIZE, r=SIZE, s=SIZE, n=1, ring=ring, N=4,
+                       straggler_budget=1, privacy_t=privacy_t)
+    scheme = plan(spec, objective="threshold").instantiate()
+    rng = np.random.default_rng(7)
+    A = ring.random(rng, (SIZE, SIZE))
+    B = ring.random(rng, (SIZE, SIZE))
+    key = jax.random.PRNGKey(5) if privacy_t else None
+    return ring, scheme, A, B, key
+
+
+@pytest.mark.parametrize("privacy_t", [0, 1])
+def test_streaming_bit_identical_to_local_backend(stream_pool, privacy_t):
+    """Chunked share transfer accumulates partial products exactly: the
+    pool decode equals LocalSimBackend bit for bit under a fixed key, for
+    plain and secure schemes alike."""
+    from repro.cdmm import coded_matmul
+
+    ring, scheme, A, B, key = _scheme_for(privacy_t)
+    C_pool, st = stream_pool.execute(scheme, A, B, key=key, timeout=180)
+    C_local = coded_matmul(A, B, scheme, backend="local", key=key)
+    np.testing.assert_array_equal(np.asarray(C_pool), np.asarray(C_local))
+    if privacy_t == 0:
+        np.testing.assert_array_equal(
+            np.asarray(C_pool), np.asarray(ring.matmul(A, B))
+        )
+    # compressed transport put fewer bytes on the wire than the payloads
+    assert st.bytes_out < st.raw_bytes_out
+    assert st.codecs == ("pack+zlib",)
+
+
+def test_master_stats_schema_and_byte_accounting(stream_pool):
+    snap = stream_pool.stats()
+    for k in ("requests", "completed", "failed", "redispatched",
+              "bytes_out", "raw_bytes_out", "bytes_in", "raw_bytes_in",
+              "workers_live", "wall_ms_hist", "wall_ms_p50",
+              "time_to_R_ms_hist", "time_to_R_ms_p99"):
+        assert k in snap, k
+    assert snap["completed"] >= 1
+    assert 0 < snap["bytes_out"] < snap["raw_bytes_out"]
+    assert 0 < snap["bytes_in"] < snap["raw_bytes_in"]
+
+
+def test_local_pool_positional_args_warn_once():
+    from repro.dist.master import LocalPool, _LEGACY_POOL_ARGS
+
+    assert _LEGACY_POOL_ARGS[0] == "workers"
+    dist_config._WARNED.discard("LocalPool-positional")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p = LocalPool(2)
+        try:
+            assert p.config.workers == 2
+        finally:
+            p.close()
+        p = LocalPool(2)
+        p.close()
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and "positional" in str(x.message)]
+    assert len(dep) == 1

@@ -28,8 +28,8 @@ if [[ "${1:-}" != "--bench-only" ]]; then
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "== benchmark smoke: Table 1 + straggler/elastic + secure + kernels + serving =="
-  python -m benchmarks.run --only table1,straggler,secure,kernels,serving \
+  echo "== benchmark smoke: Table 1 + straggler/elastic + secure + kernels + serving + wire =="
+  python -m benchmarks.run --only table1,straggler,secure,kernels,serving,wire \
     --json BENCH_ci.json
   if [[ -f benchmarks/baseline.json ]]; then
     echo "== benchmark regression gate (>25% vs benchmarks/baseline.json) =="
