@@ -39,7 +39,15 @@ from __future__ import annotations
 from collections import OrderedDict
 from dataclasses import dataclass
 from math import ceil, gcd, log
-from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    Optional,
+    Protocol,
+    Tuple,
+    runtime_checkable,
+)
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +61,7 @@ from repro.core.ep_codes import (
     smallest_embedding_ext,
 )
 from repro.core.galois import Ring
-from repro.core.gcsa import CSACode, gcsa_cost_model
+from repro.core.gcsa import CSACode, GCSACode, gcsa_cost_model
 from repro.core.secure import (
     SecureBatchEPRMFE,
     SecureEP,
@@ -75,6 +83,7 @@ __all__ = [
     "EPRMFE2Adapter",
     "BatchRMFEAdapter",
     "CSAAdapter",
+    "GCSAGeneralAdapter",
     "SecureEPAdapter",
     "SecureBatchRMFEAdapter",
 ]
@@ -443,6 +452,51 @@ class CSAAdapter(DecodeOpsMixin):
         return self.code.costs(spec)
 
 
+class GCSAGeneralAdapter(DecodeOpsMixin):
+    """Executable general-(u, v, w, kappa) GCSA: EP inner partitioning
+    composed with the CSA outer Cauchy structure over kappa-grouped
+    batches, run over the smallest embedding extension with >= n + N
+    exceptional points.  R = uvw(n + kappa - 1) + w - 1.
+
+    The registry's packing slot carries kappa (any divisor of the batch),
+    so the planner sweeps group sizes the same way it sweeps RMFE packing
+    factors — kappa = n is the CSA communication-optimal end, kappa = 1
+    the per-product-poles end."""
+
+    name = "gcsa_general"
+
+    def __init__(
+        self, base: Ring, n: int, N: int, u: int, v: int, w: int, kappa: int
+    ):
+        ext = smallest_embedding_ext(base, n + N)
+        self.base, self.ring = base, ext
+        self.code = GCSACode(ext, L=n, N=N, u=u, v=v, w=w, kappa=kappa)
+        self.N, self.R, self.batch = N, self.code.R, n
+        self.partition = (u, v, w)
+        self.kappa = kappa
+
+    def encode_a(self, As, key=None):
+        return self.code.encode_a(self.ring.embed_base(As, self.base))
+
+    def encode_b(self, Bs, key=None):
+        return self.code.encode_b(self.ring.embed_base(Bs, self.base))
+
+    def encode_a_at(self, As, i, key=None):
+        return self.code.encode_a_at(self.ring.embed_base(As, self.base), i)
+
+    def encode_b_at(self, Bs, i, key=None):
+        return self.code.encode_b_at(self.ring.embed_base(Bs, self.base), i)
+
+    def worker_compute(self, FA, GB):
+        return self.code.worker_compute(FA, GB)
+
+    def decode(self, H, idx):
+        return self.code.decode(H, idx)[..., : self.base.D]
+
+    def costs(self, spec: ProblemSpec) -> EPCosts:
+        return self.code.costs(spec)
+
+
 class SecureEPAdapter(DecodeOpsMixin):
     """T-private EP code (secure single DMM): the base ring is embedded into
     the smallest extension with >= N + 1 exceptional points and a masked EP
@@ -636,6 +690,25 @@ def _predict_gcsa(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
     return gcsa_cost_model(spec.t, spec.r, spec.s, 1, 1, 1, n, n, spec.N, m_eff)
 
 
+def _gcsa_packings(spec: ProblemSpec) -> Tuple[int, ...]:
+    """Packing candidates for gcsa_general: the group size kappa, any
+    divisor of the batch (kappa = n recovers the CSA point)."""
+    return tuple(d for d in range(1, spec.n + 1) if spec.n % d == 0)
+
+
+def _predict_gcsa_general(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
+    p, D0 = spec.ring.p, spec.ring.D
+    kappa = n  # the packing slot carries the group size
+    if spec.n < 2 or kappa < 1 or spec.n % kappa:
+        return None
+    if spec.t % u or spec.r % w or spec.s % v:
+        return None
+    m_eff = _embed_ext_D(p, D0, spec.N + spec.n) / D0
+    return gcsa_cost_model(
+        spec.t, spec.r, spec.s, u, v, w, spec.n, kappa, spec.N, m_eff
+    )
+
+
 def _predict_ep_secure(spec: ProblemSpec, u, v, w, n) -> Optional[EPCosts]:
     p, D0 = spec.ring.p, spec.ring.D
     T = spec.privacy_t
@@ -680,12 +753,20 @@ class SchemeFamily:
     ``predict(spec, u, v, w, n)`` returns the analytic EPCosts or None when
     the configuration is infeasible; ``build`` constructs the executable
     adapter for a feasible configuration.
+
+    ``packing`` (optional) enumerates the family's candidate values for the
+    4th build/predict parameter given a spec.  When absent the planner uses
+    its defaults: ``(spec.n,)`` for batched families, divisors of the
+    operand dimensions for single families.  Batched families whose 4th
+    parameter is NOT the batch size (gcsa_general reads it as the group
+    size kappa) must supply it.
     """
 
     name: str
     batched: bool
     build: Callable[[ProblemSpec, int, int, int, int], CdmmScheme]
     predict: Callable[[ProblemSpec, int, int, int, int], Optional[EPCosts]]
+    packing: Optional[Callable[[ProblemSpec], Iterable[int]]] = None
 
 
 _REGISTRY: Dict[str, SchemeFamily] = {}
@@ -738,6 +819,14 @@ register_scheme(SchemeFamily(
     "gcsa", True,
     lambda spec, u, v, w, n: CSAAdapter(spec.ring, n, spec.N),
     _predict_gcsa,
+))
+register_scheme(SchemeFamily(
+    "gcsa_general", True,
+    lambda spec, u, v, w, n: GCSAGeneralAdapter(
+        spec.ring, spec.n, spec.N, u, v, w, n
+    ),
+    _predict_gcsa_general,
+    packing=_gcsa_packings,
 ))
 register_scheme(SchemeFamily(
     "ep_secure", False,

@@ -223,8 +223,12 @@ def _divisors(x: int, cap: int) -> List[int]:
     return [d for d in range(1, min(x, cap) + 1) if x % d == 0]
 
 
-def _packing_candidates(spec: ProblemSpec, batched: bool) -> Iterable[int]:
-    if batched:
+def _packing_candidates(spec: ProblemSpec, fam) -> Iterable[int]:
+    if fam.packing is not None:
+        # family-supplied enumeration of the 4th build/predict parameter
+        # (gcsa_general: group sizes kappa dividing the batch)
+        return tuple(fam.packing(spec))
+    if fam.batched:
         return (spec.n,)
     # internal packing factors for the single-DMM RMFE variants; n=1 covers
     # the unpacked families (their predicts reject n != 1 / n < 2 anyway).
@@ -323,7 +327,7 @@ def plan(
     # partition caps are lossless: R = uvw + w - 1 means u, v <= R <= N and
     # w <= (R + 1) / 2, so nothing beyond them can pass the budget filter
     for name, fam in sorted(families.items()):
-        for n in _packing_candidates(spec, fam.batched):
+        for n in _packing_candidates(spec, fam):
             for u in _divisors(spec.t, cap=budgeted_R):
                 for v in _divisors(spec.s, cap=budgeted_R):
                     for w in _divisors(spec.r, cap=(budgeted_R + 1) // 2):

@@ -4,7 +4,7 @@ from .rmfe import BasicRMFE, ConcatRMFE, build_rmfe
 from .ep_codes import EPCode, PlainCDMM, ep_cost_model, EPCosts
 from .batch_rmfe import BatchEPRMFE
 from .single_rmfe import EPRMFE_I, EPRMFE_II
-from .gcsa import CSACode, gcsa_cost_model, gr_solve
+from .gcsa import CSACode, GCSACode, gcsa_cost_model, gr_solve
 from .secure import (
     SecureBatchEPRMFE,
     SecureEP,
@@ -26,7 +26,7 @@ __all__ = [
     "BasicRMFE", "ConcatRMFE", "build_rmfe",
     "EPCode", "PlainCDMM", "ep_cost_model", "EPCosts",
     "BatchEPRMFE", "EPRMFE_I", "EPRMFE_II",
-    "CSACode", "gcsa_cost_model", "gr_solve",
+    "CSACode", "GCSACode", "gcsa_cost_model", "gr_solve",
     "SecureEPCode", "SecureEP", "SecureBatchEPRMFE",
     "secure_recovery_threshold", "smallest_secure_ext",
     "select_workers", "simulate_stragglers", "straggler_latencies",

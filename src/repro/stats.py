@@ -115,12 +115,15 @@ def merge_snapshots(*snaps: Dict[str, object]) -> Dict[str, object]:
 
     Counters (ints/floats) sum; ``*_hist`` dicts sum per bucket;
     ``*_p50``/``*_p99`` are recomputed from the merged histograms (never
-    summed — quantiles don't add).  Keys that appear in only one snapshot
-    pass through; non-numeric values (labels, lists) keep the first
-    occurrence.
+    summed — quantiles don't add).  A precomputed quantile whose matching
+    ``*_hist`` appears in no snapshot keeps its first occurrence — there is
+    nothing to recompute from, and dropping it would silently thin the
+    schema.  Keys that appear in only one snapshot pass through;
+    non-numeric values (labels, lists) keep the first occurrence.
     """
     merged: Dict[str, object] = {}
     hists: Dict[str, Dict[str, int]] = {}
+    quantiles: Dict[str, object] = {}
     for snap in snaps:
         for key, val in snap.items():
             if key.endswith("_hist") and isinstance(val, dict):
@@ -128,7 +131,9 @@ def merge_snapshots(*snaps: Dict[str, object]) -> Dict[str, object]:
                 for label, count in val.items():
                     acc[label] = acc.get(label, 0) + int(count)
             elif key.endswith("_p50") or key.endswith("_p99"):
-                continue  # recomputed below from the merged hist
+                # recomputed below when the merged hist exists; kept as a
+                # passthrough (first occurrence) when it doesn't
+                quantiles.setdefault(key, val)
             elif isinstance(val, bool):
                 merged[key] = merged.get(key, False) or val
             elif isinstance(val, (int, float)):
@@ -140,4 +145,7 @@ def merge_snapshots(*snaps: Dict[str, object]) -> Dict[str, object]:
         merged[key] = hist
         merged[f"{base}_p50"] = quantile_from_hist(hist, 0.50)
         merged[f"{base}_p99"] = quantile_from_hist(hist, 0.99)
+    for key, val in quantiles.items():
+        if f"{key[:-len('_p50')]}_hist" not in hists:  # _p99 same length
+            merged[key] = val
     return merged

@@ -16,6 +16,16 @@ at the cost of re-tracing shared helpers in later modules.
 import pytest
 
 
+def pytest_configure(config):
+    # no pytest.ini/pyproject in this repo, so the marker registers here.
+    # `tools/ci.sh --fast` deselects `slow` (the inline dist/serve smokes)
+    # to keep a sub-5-minute local gate; bare `python -m pytest -x -q`
+    # remains the full tier-1 run.
+    config.addinivalue_line(
+        "markers", "slow: multi-process / serving smokes skipped by ci.sh --fast"
+    )
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _bound_live_xla_programs():
     yield

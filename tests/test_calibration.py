@@ -148,7 +148,9 @@ def test_plan_ranks_by_fitted_coefficients_and_perturbation_flips():
                  calibration=_single_coef_set("encode"))
     p_comp = plan(spec, objective="latency",
                   calibration=_single_coef_set("compute"))
-    assert p_enc.best.scheme == "gcsa"
+    # either GCSA variant qualifies: gcsa_general at (1,1,1, kappa=1)
+    # has the same cheap encode with an even lower threshold
+    assert p_enc.best.scheme in ("gcsa", "gcsa_general")
     assert p_comp.best.scheme == "batch_ep_rmfe"
     assert p_enc.best.scheme != p_comp.best.scheme
 

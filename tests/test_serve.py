@@ -30,6 +30,10 @@ from repro.dist import LocalPool, PoolScheduler
 from repro.serve import BatchCoalescer, CoalescePolicy, ServeScheduler
 from repro.serve.stats import ServeStats
 
+# multi-process pool smokes dominate tier-1 wall time; deselected by
+# `tools/ci.sh --fast` (see tests/conftest.py for the marker)
+pytestmark = pytest.mark.slow
+
 Z32 = make_ring(2, 32, ())
 KEY = jax.random.PRNGKey(11)
 POOL_WORKERS = 4
@@ -179,6 +183,21 @@ def test_amortized_coalescing_wins_at_n2_loses_at_n4():
     assert p2.best.score < p1.best.score
     assert not get_scheme(p4.best.scheme).batched  # singles won back
     assert p4.best.score == pytest.approx(p1.best.score)
+
+
+def test_amortized_scan_considers_gcsa_general():
+    # the executable general-GCSA family rides the registry into the
+    # amortized cross-arity scan with zero serve-side plumbing: at n=2 a
+    # (u=v=w=1, kappa) configuration fits the R <= 5 budget and is ranked
+    # (it loses to batch_ep_rmfe on cost, which keeps the pinned decisions
+    # in test_amortized_coalescing_wins_at_n2_loses_at_n4 intact)
+    spec = ProblemSpec(t=16, r=16, s=16, n=2, ring=Z32, N=6,
+                       straggler_budget=1)
+    p = plan(spec, objective="amortized", backend="pool")
+    g = p.by_scheme("gcsa_general")
+    assert g is not None and (g.u, g.v, g.w) == (1, 1, 1)
+    b = p.by_scheme("batch_ep_rmfe")
+    assert b.score < g.score
 
 
 def test_amortized_objective_requires_registration():

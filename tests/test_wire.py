@@ -284,6 +284,26 @@ def test_merge_snapshots_sums_and_recomputes():
     assert m["label"] == "a" and m["flag"] is True
 
 
+def test_merge_snapshots_passes_quantiles_through_without_hist():
+    """Regression: a precomputed *_p50/*_p99 whose *_hist appears in no
+    snapshot must survive the merge (first occurrence), not vanish."""
+    m = merge_snapshots({"wait_ms_p50": 4.0}, {})
+    assert m == {"wait_ms_p50": 4.0}
+    # first occurrence wins among passthroughs (quantiles don't add)
+    m = merge_snapshots({"wait_ms_p99": 9.0}, {"wait_ms_p99": 50.0})
+    assert m == {"wait_ms_p99": 9.0}
+    # ... but a histogram anywhere still triggers the recompute path
+    m = merge_snapshots(
+        {"x_ms_p50": 99.0}, {"x_ms_hist": {"<=1": 3, "inf": 0}}
+    )
+    assert m["x_ms_p50"] == 1.0
+    # mixed: recomputed key and passthrough key coexist
+    m = merge_snapshots(
+        {"x_ms_hist": {"<=1": 1}, "x_ms_p50": 7.0, "wait_ms_p50": 4.0}, {}
+    )
+    assert m["x_ms_p50"] == 1.0 and m["wait_ms_p50"] == 4.0
+
+
 # --------------------------------------------------------------------------
 # pipelined streaming vs LocalSimBackend (one real pool, shared)
 # --------------------------------------------------------------------------

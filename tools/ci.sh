@@ -2,7 +2,9 @@
 # CI entry point: tier-1 test suite + a short benchmark smoke.
 #
 #   tools/ci.sh              # full tier-1 + bench smoke -> BENCH_ci.json + gate
-#   tools/ci.sh --fast       # tier-1 only
+#   tools/ci.sh --fast       # quick local gate: tier-1 minus `slow`-marked
+#                            # multi-process smokes (test_dist/test_serve),
+#                            # reduced hypothesis examples, no bench smoke
 #   tools/ci.sh --bench-only # bench smoke + gate only (CI's bench-smoke job,
 #                            # which already ran tier-1 via its `needs:`)
 #
@@ -16,15 +18,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" != "--bench-only" ]]; then
   echo "== tier-1 tests =="
+  pytest_args=(-x -q)
   if [[ "${1:-}" == "--fast" ]]; then
     # reduced-example hypothesis profile: the property-based conformance
     # suite (tests/test_conformance.py) stays under the fast-tier budget
     export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci-fast}"
+    # deselect the `slow`-marked multi-process dist/serve smokes (marker
+    # registered in tests/conftest.py): they dominate tier-1 wall time.
+    # Bare `python -m pytest -x -q` stays the full tier-1 gate.
+    pytest_args+=(-m "not slow")
   fi
   # tier-1 plans must be deterministic: rank by the analytic cost model,
   # not by whatever timing data benchmarks/calibration.json was last
   # regenerated from (tests that want calibration pin it explicitly)
-  REPRO_CALIBRATION="${REPRO_CALIBRATION:-off}" python -m pytest -x -q
+  REPRO_CALIBRATION="${REPRO_CALIBRATION:-off}" python -m pytest "${pytest_args[@]}"
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
