@@ -9,7 +9,10 @@ concurrent same-shape requests over the same worker pool, served two ways —
 Rows carry requests/s, per-request latency p50/p99 (submit-to-result,
 futures timed individually) and the engine's mean batch fill.  The row's
 ``us`` is wall-clock per request across the whole stream — the regression
-gate therefore tracks serving throughput history directly.
+gate therefore tracks serving throughput history directly.  A third row,
+``serving_traced``, re-runs the batched mode with ``repro.obs`` span
+tracing enabled and reports its overhead against the untraced row (the
+acceptance bound is <5%).
 
 Warmup matters more here than in the jit benches: the any-R ``decode_op``
 compiles per live *subset* (up to C(N, R) distinct decoders), so the first
@@ -105,12 +108,44 @@ def run(full: bool = False) -> None:
             snap = sched.stats.snapshot()
         r = sorted(runs, key=lambda x: x["wall_s"])[len(runs) // 2]
         lat = np.asarray(r["lat_s"]) * 1e3
+        batched_wall = r["wall_s"]
         emit(
             f"serving_batched_{requests}x{size}",
             r["wall_s"] * 1e6 / requests,
             rps=round(requests / r["wall_s"], 2),
             p50_ms=round(float(np.percentile(lat, 50)), 1),
             p99_ms=round(float(np.percentile(lat, 99)), 1),
-            mean_fill=round(snap["mean_fill"], 2),
+            mean_fill=round(snap["serve_mean_fill"], 2),
+            workers=workers,
+        )
+
+        # -- traced: same batched mode under repro.obs span recording -----
+        from repro import obs
+
+        obs.set_enabled(True)
+        try:
+            with ServeScheduler(
+                pool.master,
+                CoalescePolicy(target_batch_n=8, max_wait_ms=50.0),
+                max_queue=requests, max_inflight=4, seed=0,
+            ) as sched:
+                _stream(lambda A, B: sched.submit(A, B, spec=spec), pairs)
+                runs = [
+                    _stream(
+                        lambda A, B: sched.submit(A, B, spec=spec), pairs
+                    )
+                    for _ in range(iters)
+                ]
+        finally:
+            obs.set_enabled(None)
+            obs.tracer().clear()
+        r = sorted(runs, key=lambda x: x["wall_s"])[len(runs) // 2]
+        emit(
+            f"serving_traced_{requests}x{size}",
+            r["wall_s"] * 1e6 / requests,
+            rps=round(requests / r["wall_s"], 2),
+            overhead_pct=round(
+                (r["wall_s"] / batched_wall - 1.0) * 100.0, 2
+            ),
             workers=workers,
         )

@@ -112,9 +112,18 @@ class LocalSimBackend:
         mask: Optional[jnp.ndarray] = None,
         key: Optional[jax.Array] = None,
     ) -> jnp.ndarray:
-        FA, GB = encode_all(scheme, A, B, key=key)
-        H = scheme.worker_compute(FA, GB)
-        return decode_from(scheme, H, live_indices(scheme, mask))
+        # same span schema as the pool path (repro.obs), so a "local"
+        # trace reads like a pool trace with one worker lane per share
+        from repro.obs import trace as obs
+
+        ctx = obs.maybe_context("local")
+        tracer = obs.tracer()
+        with tracer.span(ctx, "encode", "local", scheme=scheme.name):
+            FA, GB = encode_all(scheme, A, B, key=key)
+        with tracer.span(ctx, "compute", "local", N=int(scheme.N)):
+            H = scheme.worker_compute(FA, GB)
+        with tracer.span(ctx, "decode", "local", scheme=scheme.name):
+            return decode_from(scheme, H, live_indices(scheme, mask))
 
 
 def shard_worker_body(

@@ -30,11 +30,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+from repro import settings
 from repro.core.ep_codes import EPCosts
 
 __all__ = [
@@ -43,6 +43,7 @@ __all__ = [
     "DEFAULT_CALIBRATION_PATH",
     "fit_rows",
     "load_calibration",
+    "rows_from_timeline",
     "save_calibration",
 ]
 
@@ -221,6 +222,64 @@ def fit_rows(rows: Iterable[Mapping]) -> CalibrationSet:
     return CalibrationSet(backends=backends, device=device)
 
 
+# trace span name -> (stage suffix, how durations aggregate)
+_TRACE_STAGES: Dict[str, Tuple[str, str]] = {
+    "encode": ("encode", "sum"),  # per-share encodes are serial master work
+    "compute": ("worker", "each"),  # one observation per worker matmul
+    "decode": ("decode", "sum"),
+    "send": ("comm", "sum"),  # wire time both directions pools into comm
+    "recv": ("comm", "sum"),
+}
+
+
+def rows_from_timeline(
+    timeline, costs: EPCosts, backend: str = "pool"
+) -> List[Dict]:
+    """Fit-compatible rows from one traced request's measured spans.
+
+    The alternative to the benchmark harness: a ``--trace`` run of the
+    real pool already times every stage of a real request, so its
+    :class:`repro.obs.Timeline` plus the plan's :class:`EPCosts` yields
+    the same ``(us, feature, backend)`` rows ``fit_rows`` consumes.
+    Encode/decode/wire spans sum into one serial observation each (that
+    is what the master actually spent); each per-worker ``compute`` span
+    is its own observation of ``worker_ops``.  Feed several timelines'
+    rows to :func:`fit_rows` to average out noise.
+    """
+    feature_of = {
+        "encode": float(costs.encode_ops),
+        "worker": float(costs.worker_ops),
+        "decode": float(costs.decode_ops),
+        "comm": float(costs.upload + costs.download),
+    }
+    sums: Dict[str, float] = {}
+    rows: List[Dict] = []
+
+    def _row(stage: str, us: float) -> Dict:
+        feature_key, _ = STAGE_FEATURES[stage]
+        return {
+            "name": f"trace_{backend}_{stage}",
+            "us": us,
+            "derived": {feature_key: feature_of[stage], "backend": backend},
+        }
+
+    for span in timeline.spans:
+        mapped = _TRACE_STAGES.get(span.name)
+        if mapped is None:
+            continue
+        stage, mode = mapped
+        us = span.duration_s * 1e6
+        if us <= 0.0 or feature_of[stage] <= 0.0:
+            continue
+        if mode == "each":
+            rows.append(_row(stage, us))
+        else:
+            sums[stage] = sums.get(stage, 0.0) + us
+    for stage, us in sorted(sums.items()):
+        rows.append(_row(stage, us))
+    return rows
+
+
 def save_calibration(
     cal: CalibrationSet, path: Optional[Path] = None
 ) -> Path:
@@ -245,9 +304,9 @@ def load_calibration(
     ``benchmarks/calibration.json``.  Parsed files are memoized per path.
     """
     if path is None:
-        env = os.environ.get("REPRO_CALIBRATION")
+        env = settings.get("calibration")
         if env is not None:
-            if env.strip().lower() in ("", "0", "off", "none"):
+            if str(env).strip().lower() in ("", "0", "off", "none"):
                 return None
             path = Path(env)
         else:

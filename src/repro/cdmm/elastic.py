@@ -251,10 +251,17 @@ class ElasticBackend:
         """Everyone present and instant: one vmapped XLA program, but the
         decode still routes through the cached per-subset operator so the
         warm path shares compilations with the event loop."""
-        FA, GB = encode_all(scheme, A, B, key=key)
-        H = scheme.worker_compute(FA, GB)
+        from repro.obs import trace as obs
+
+        ctx = obs.maybe_context("elastic")
+        tracer = obs.tracer()
+        with tracer.span(ctx, "encode", "elastic", scheme=scheme.name):
+            FA, GB = encode_all(scheme, A, B, key=key)
+        with tracer.span(ctx, "compute", "elastic", N=int(scheme.N)):
+            H = scheme.worker_compute(FA, GB)
         idx = tuple(range(scheme.R))
-        C = scheme.decode_op(idx)(H[: scheme.R])
+        with tracer.span(ctx, "decode", "elastic", scheme=scheme.name):
+            C = scheme.decode_op(idx)(H[: scheme.R])
         stats = ElasticStats(
             fast_path=True,
             dispatched=tuple(range(scheme.N)),
@@ -290,14 +297,22 @@ class ElasticBackend:
             scheme, keyed=key is not None, use_kernel=self.use_kernel
         )
 
+        from repro.obs import trace as obs
+
+        ctx = obs.maybe_context("elastic")
+        tracer = obs.tracer()
+
         q: "queue.Queue" = queue.Queue()
         scale = self.simulate_ms_scale
         done = threading.Event()  # master finished: stragglers stop early
 
         def worker_task(i: int, fa, gb):
             try:
+                t_c = obs.now()
                 h = compute(fa, gb)
                 h.block_until_ready()
+                tracer.add(ctx, "compute", "worker", t_c, obs.now(),
+                           wid=int(i), share=int(i), simulated=True)
                 if scale > 0.0 and np.isfinite(resp[i]):
                     # simulated latency; cut short the moment the master
                     # decodes so stragglers never block pool reuse or exit
@@ -312,13 +327,17 @@ class ElasticBackend:
         # dispatch in join order; encode of worker k overlaps the pool's
         # compute of workers < k (the master thread never blocks here)
         for i in dispatch:
+            t_e = obs.now()
             if key is None:
                 fa, gb = encode_at(A, B, jnp.int32(i))
             else:
                 fa, gb = encode_at(A, B, jnp.int32(i), key)
+            tracer.add(ctx, "encode", "elastic", t_e, obs.now(),
+                       share=int(i))
             pool.submit(worker_task, int(i), fa, gb)
         # response queue: consume until the R-th needed response lands;
         # straggler tasks drain into the dead queue after `done` fires
+        t_w = obs.now()
         try:
             while needed - set(got):
                 i, h, err = q.get()
@@ -328,8 +347,13 @@ class ElasticBackend:
                     got[i] = h
         finally:
             done.set()  # race past stragglers: wake any simulated sleeps
+        tracer.add(ctx, "wait_R", "elastic", t_w, obs.now(),
+                   R=int(R), responders=sorted(int(i) for i in got))
 
+        t_d = obs.now()
         C = decode_responses(scheme, got)
+        tracer.add(ctx, "decode", "elastic", t_d, obs.now(),
+                   scheme=scheme.name)
         idx = tuple(sorted(int(i) for i in fastR))
         stats = ElasticStats(
             fast_path=False,

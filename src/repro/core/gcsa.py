@@ -43,7 +43,6 @@ undoes it, and the useful coefficients assemble C_g exactly as in
 """
 from __future__ import annotations
 
-import os
 import warnings
 from typing import Optional
 
@@ -51,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax, vmap
+
+from repro import settings
 
 from .ep_codes import EPCosts
 from .galois import Ring
@@ -121,7 +122,7 @@ def gr_solve(
         factors = M[:, k].at[k].set(0)  # (n, D)
         M = ring.sub(M, ring.mul(factors[:, None, :], Mk[None, :, :]))
         Y = ring.sub(Y, ring.mul(factors[:, None, :], Yk[None, :, :]))
-    if ok is not None and os.environ.get("REPRO_DEBUG_SOLVE") == "1":
+    if ok is not None and settings.get_bool("debug_solve"):
         jax.debug.callback(_raise_singular, ok)
     return Y
 

@@ -23,9 +23,14 @@ per process.
 from __future__ import annotations
 
 import os
-import warnings
 from dataclasses import dataclass, replace
 from typing import List, Optional, Tuple, Union
+
+from repro import settings
+
+# the warn-once registry lives in repro.settings now; re-exported here
+# because existing callers (and tests) reach it as dist_config._WARNED
+from repro.settings import _WARNED, warn_deprecated_once  # noqa: F401
 
 __all__ = [
     "Endpoint",
@@ -33,17 +38,6 @@ __all__ = [
     "PoolConfig",
     "parse_hostfile",
 ]
-
-# deprecation shims warn once per process per form, even under test
-# harnesses that reset the warnings filters
-_WARNED: set = set()
-
-
-def warn_deprecated_once(key: str, message: str) -> None:
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
 
 
 @dataclass(frozen=True)
@@ -208,29 +202,28 @@ class PoolConfig:
     def from_env(cls, env=os.environ, **overrides) -> "PoolConfig":
         """Config from the environment.
 
-        New-style variables: ``REPRO_DIST_WORKERS``,
-        ``REPRO_DIST_TRANSPORT``, ``REPRO_DIST_HOSTFILE``,
-        ``REPRO_DIST_MASTER_ADDR``, ``REPRO_DIST_STREAM_CHUNK``.  The
-        legacy ``REPRO_POOL_WORKERS`` still works but emits one
-        ``DeprecationWarning`` per process.
+        Every variable resolves through :mod:`repro.settings` (see
+        ``python -m repro.settings`` for the full documented list):
+        ``REPRO_DIST_WORKERS``, ``REPRO_DIST_TRANSPORT``,
+        ``REPRO_DIST_HOSTFILE``, ``REPRO_DIST_MASTER_ADDR``,
+        ``REPRO_DIST_STREAM_CHUNK``.  The legacy ``REPRO_POOL_WORKERS``
+        still works but emits one ``DeprecationWarning`` per process.
         """
         kw = dict(overrides)
-        if "REPRO_DIST_HOSTFILE" in env and "hosts" not in kw:
-            kw["hosts"] = tuple(parse_hostfile(env["REPRO_DIST_HOSTFILE"]))
+        hostfile = settings.get("dist_hostfile", env)
+        if hostfile is not None and "hosts" not in kw:
+            kw["hosts"] = tuple(parse_hostfile(hostfile))
         if "workers" not in kw:
-            if "REPRO_DIST_WORKERS" in env:
-                kw["workers"] = int(env["REPRO_DIST_WORKERS"])
-            elif "REPRO_POOL_WORKERS" in env:
-                warn_deprecated_once(
-                    "REPRO_POOL_WORKERS",
-                    "REPRO_POOL_WORKERS is deprecated; set "
-                    "REPRO_DIST_WORKERS or pass PoolConfig(workers=...)",
-                )
-                kw["workers"] = int(env["REPRO_POOL_WORKERS"])
-        if "REPRO_DIST_TRANSPORT" in env and "transport" not in kw:
-            kw["transport"] = env["REPRO_DIST_TRANSPORT"]
-        if "REPRO_DIST_MASTER_ADDR" in env and "endpoint" not in kw:
-            kw["endpoint"] = Endpoint.parse(env["REPRO_DIST_MASTER_ADDR"])
-        if "REPRO_DIST_STREAM_CHUNK" in env and "stream_chunk_bytes" not in kw:
-            kw["stream_chunk_bytes"] = int(env["REPRO_DIST_STREAM_CHUNK"])
+            workers = settings.get_int("dist_workers", env)
+            if workers is not None:
+                kw["workers"] = workers
+        transport = settings.get("dist_transport", env)
+        if transport is not None and "transport" not in kw:
+            kw["transport"] = transport
+        master_addr = settings.get("dist_master_addr", env)
+        if master_addr is not None and "endpoint" not in kw:
+            kw["endpoint"] = Endpoint.parse(master_addr)
+        chunk = settings.get_int("dist_stream_chunk", env)
+        if chunk is not None and "stream_chunk_bytes" not in kw:
+            kw["stream_chunk_bytes"] = chunk
         return cls(**kw)

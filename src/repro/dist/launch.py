@@ -36,6 +36,8 @@ import sys
 import time
 from typing import Dict, List, Optional
 
+from repro import settings
+
 from .config import Endpoint, HostSpec, PoolConfig
 
 __all__ = [
@@ -63,7 +65,7 @@ def spawn_local_workers(
 
     env = _worker_env()
     # REPRO_POOL_LOG=1 lets worker stderr through for debugging
-    sink = None if os.environ.get("REPRO_POOL_LOG") else subprocess.DEVNULL
+    sink = None if settings.get_bool("pool_log") else subprocess.DEVNULL
     procs = []
     for i in range(count):
         procs.append(subprocess.Popen(
@@ -130,7 +132,7 @@ class HostPool:
         self.agents: List[subprocess.Popen] = []
         pending_remote: List[HostSpec] = []
         env = _worker_env()
-        sink = (None if os.environ.get("REPRO_POOL_LOG")
+        sink = (None if settings.get_bool("pool_log")
                 else subprocess.DEVNULL)
         for idx, spec in enumerate(cfg.hosts):
             addr = connect_addr

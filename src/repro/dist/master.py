@@ -60,7 +60,8 @@ import numpy as np
 
 from repro.cdmm.elastic import NotEnoughResponders, decode_responses, worker_closures
 from repro.core.straggler import MembershipEvents
-from repro.stats import Histogram
+from repro.obs import trace as obs
+from repro.stats import Histogram, StatsSnapshot, namespaced
 
 from .config import Endpoint, PoolConfig, warn_deprecated_once
 from .protocol import Channel, ProtocolError, listen, negotiate
@@ -129,9 +130,11 @@ class _WorkerHandle:
 class _Request:
     """Routing state of one in-flight coded matmul."""
 
-    def __init__(self, rid: int, R: int):
+    def __init__(self, rid: int, R: int,
+                 trace: Optional[obs.TraceContext] = None):
         self.rid = rid
         self.R = R
+        self.trace = trace
         self.events: "queue.Queue" = queue.Queue()
         self.lock = threading.Lock()
         # task_id -> (share index, fa, gb, wid currently assigned)
@@ -196,6 +199,11 @@ class Master:
         }
         self._wall_hist = Histogram()
         self._time_to_R_hist = Histogram()
+        # rid -> trace_id of recently finished traced requests, so spans
+        # from stragglers that answer after the any-R decode still land
+        # on the right timeline (bounded: oldest entries roll off)
+        self._done_traces: "Dict[int, str]" = {}
+        self._done_traces_cap = 256
         # failure injection: per-worker-id compute delay stamped into task
         # headers (tests/CI park a victim's compute so SIGKILL lands mid-task)
         self.task_delay_ms: Dict[int, float] = {}
@@ -303,8 +311,20 @@ class Master:
         rid = header.get("req")
         with self._lock:
             req = self._requests.get(rid)
+            done_tid = self._done_traces.get(rid) if req is None else None
         if req is None:
-            return  # request already decoded (straggler / duplicate)
+            # request already decoded (straggler / duplicate) — but a
+            # traced request still wants the late responder on its
+            # timeline, tagged so the viewer can tell it lost the race
+            if done_tid is not None:
+                self._collect_worker_spans(
+                    done_tid, handle, header, wire, late=True
+                )
+            return
+        if req.trace is not None:
+            self._collect_worker_spans(
+                req.trace.trace_id, handle, header, wire, late=False
+            )
         with req.lock:
             req.pending.pop(header.get("task"), None)
             req.raw_in += raw
@@ -318,6 +338,39 @@ class Master:
             req.events.put(
                 ("error", int(header["i"]), (handle.wid, header.get("err")))
             )
+
+    def _collect_worker_spans(
+        self, trace_id: str, handle: _WorkerHandle, header: Dict,
+        wire: int, late: bool,
+    ) -> None:
+        """Land a result frame's compute span on the request's timeline.
+
+        Tracing-capable workers piggyback their span on the reply
+        (``spans`` header field); a v0 peer sends none, so the master
+        synthesizes one from the ``wall_us`` it already reports, ending
+        at receipt time — same schema either way, tagged so readers know
+        which clock produced it.
+        """
+        entries = header.get("spans")
+        tags = {
+            "wid": handle.wid, "worker": handle.name,
+            "share": header.get("i"), "wire_bytes": wire,
+        }
+        if late:
+            tags["late"] = True
+        tracer = obs.tracer()
+        if entries:
+            for span in obs.spans_from_wire(entries, trace_id, **tags):
+                tracer.record(span)
+        else:
+            t1 = obs.now()
+            wall_s = float(header.get("wall_us", 0.0)) / 1e6
+            tracer.record(obs.Span(
+                trace_id=trace_id, name="compute", component="worker",
+                t_start=t1 - wall_s, t_end=t1,
+                tags={**tags, "synthesized": True,
+                      "ok": bool(header.get("ok"))},
+            ))
 
     # -- introspection -----------------------------------------------------
 
@@ -343,17 +396,19 @@ class Master:
             for k, v in deltas.items():
                 self._counters[k] += v
 
-    def stats(self) -> Dict[str, object]:
+    def stats(self) -> StatsSnapshot:
         """Cumulative master accounting in the shared ``repro.stats``
-        snapshot schema: counters, ``bytes_in/out`` vs ``raw_bytes_in/out``
-        (on-wire vs pre-codec), and ``wall_ms``/``time_to_R_ms``
-        histograms with p50/p99."""
+        snapshot schema (``pool_``-prefixed keys): counters,
+        ``pool_bytes_in/out`` vs ``pool_raw_bytes_in/out`` (on-wire vs
+        pre-codec), and ``pool_wall_ms``/``pool_time_to_R_ms`` histograms
+        with p50/p99.  Legacy unprefixed keys still resolve (with one
+        DeprecationWarning per key)."""
         with self._stats_lock:
             snap: Dict[str, object] = dict(self._counters)
         snap["workers_live"] = len(self.live_workers())
         snap.update(self._wall_hist.snapshot("wall_ms"))
         snap.update(self._time_to_R_hist.snapshot("time_to_R_ms"))
-        return snap
+        return namespaced("pool", snap)
 
     def wait_for_workers(self, n: int, timeout: float = 60.0) -> None:
         deadline = time.time() + timeout
@@ -447,6 +502,7 @@ class Master:
         fa: np.ndarray,
         gb: np.ndarray,
         exclude: Tuple[int, ...] = (),
+        redispatch: bool = False,
     ) -> int:
         tried = set(exclude)
         while True:
@@ -466,6 +522,11 @@ class Master:
                     "degrees": list(scheme.ring.degrees),
                 },
             }
+            # trace_id rides the task header only when this worker's hello
+            # advertised tracing — a v0 peer never sees the field and the
+            # master synthesizes its compute span from wall_us instead
+            if req.trace is not None and handle.caps.get("tracing"):
+                header["trace"] = req.trace.trace_id
             # None = auto: each worker decides per its own device/ring
             # (kernel_auto_enabled on the worker side)
             header["use_kernel"] = (
@@ -479,6 +540,7 @@ class Master:
             with req.lock:
                 req.pending[task] = (i, fa, gb, handle.wid)
             try:
+                t_send = obs.now()
                 chunks = self._stream_chunks(fa, gb)
                 if chunks <= 1:
                     raw, wire = handle.send(header, {"fa": fa, "gb": gb})
@@ -514,6 +576,14 @@ class Master:
                     req.wire_out += wire
                     req.codecs.add(handle.codec)
                 self._account(raw_bytes_out=raw, bytes_out=wire)
+                # the send span IS the dead worker's footprint when it
+                # never answers: timeline evidence the share went there
+                obs.tracer().add(
+                    req.trace, "send", "pool", t_send, obs.now(),
+                    wid=handle.wid, share=i, task=task,
+                    raw_bytes=raw, wire_bytes=wire, chunks=chunks,
+                    codec=handle.codec, redispatch=redispatch,
+                )
                 return handle.wid
             except OSError:
                 # the send found the corpse; retry on another worker (the
@@ -538,7 +608,7 @@ class Master:
         for _, i, fa, gb in orphans:
             try:
                 self._send_task(req, req.scheme, i, fa, gb,
-                                exclude=(dead_wid,))
+                                exclude=(dead_wid,), redispatch=True)
                 with req.lock:
                     req.redispatched += 1
                 self._account(redispatched=1)
@@ -557,6 +627,7 @@ class Master:
         key=None,
         timeout: Optional[float] = None,
         batch_fill: Optional[int] = None,
+        trace: Optional[obs.TraceContext] = None,
     ) -> Tuple[np.ndarray, PoolStats]:
         """Run one coded matmul on the pool; returns (C, PoolStats).
 
@@ -567,8 +638,14 @@ class Master:
         only ever see masked shares.  ``batch_fill`` is observability from
         a coalescing caller: how many of the scheme's batch slots carry
         real requests (the rest are padding), surfaced on PoolStats.
+        ``trace`` carries an upstream :class:`repro.obs.TraceContext`
+        (scheduler/serving); when tracing is enabled and none is passed, a
+        fresh one is opened so direct ``Master.execute`` calls trace too.
         """
         t0 = time.perf_counter()
+        if trace is None:
+            trace = obs.maybe_context("pool")
+        tracer = obs.tracer()
         N, R = scheme.N, scheme.R
         shares = list(range(N))
         if mask is not None:
@@ -586,7 +663,7 @@ class Master:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            req = _Request(rid, R)
+            req = _Request(rid, R, trace=trace)
             req.scheme = scheme
             self._requests[rid] = req
         self._account(requests=1)
@@ -597,14 +674,17 @@ class Master:
             import jax.numpy as jnp
 
             for i in shares:
+                t_enc = obs.now()
                 if key is None:
                     fa, gb = encode_at(A, B, jnp.int32(i))
                 else:
                     fa, gb = encode_at(A, B, jnp.int32(i), key)
-                wid = self._send_task(
-                    req, scheme, i, np.asarray(fa), np.asarray(gb)
-                )
+                fa, gb = np.asarray(fa), np.asarray(gb)
+                tracer.add(trace, "encode", "pool", t_enc, obs.now(),
+                           share=i, scheme=scheme.name)
+                wid = self._send_task(req, scheme, i, fa, gb)
                 workers_used.append(wid)
+            t_wait = obs.now()
 
             got: Dict[int, np.ndarray] = {}
             errors: Dict[int, int] = {}  # share -> failed compute attempts
@@ -645,13 +725,17 @@ class Master:
                             f"shares remain (R={R}); last error: {err}"
                         )
                     if errors[i] < 2 and i not in got:
+                        t_enc = obs.now()
                         if key is None:
                             fa, gb = encode_at(A, B, jnp.int32(i))
                         else:
                             fa, gb = encode_at(A, B, jnp.int32(i), key)
+                        fa, gb = np.asarray(fa), np.asarray(gb)
+                        tracer.add(trace, "encode", "pool", t_enc,
+                                   obs.now(), share=i, retry=True)
                         self._send_task(
-                            req, scheme, i, np.asarray(fa), np.asarray(gb),
-                            exclude=(bad_wid,),
+                            req, scheme, i, fa, gb,
+                            exclude=(bad_wid,), redispatch=True,
                         )
                 else:  # "dead": no live workers remain for a re-dispatch
                     raise WorkerDied(
@@ -661,7 +745,14 @@ class Master:
             t_R = (time.perf_counter() - t0) * 1e3
             with req.lock:
                 req.done = True
+            # the any-R race: dispatch done -> R-th response landed
+            tracer.add(trace, "wait_R", "pool", t_wait, obs.now(),
+                       R=R, responders=sorted(got),
+                       redispatched=req.redispatched)
+            t_dec = obs.now()
             C = decode_responses(scheme, got)
+            tracer.add(trace, "decode", "pool", t_dec, obs.now(),
+                       live_idx=sorted(got)[:R], scheme=scheme.name)
             wall_ms = (time.perf_counter() - t0) * 1e3
             stats = PoolStats(
                 dispatched=tuple(shares),
@@ -689,6 +780,11 @@ class Master:
                 self._account(failed=1)
             with self._lock:
                 self._requests.pop(rid, None)
+                if trace is not None:
+                    # keep routing late responders' spans to this timeline
+                    self._done_traces[rid] = trace.trace_id
+                    while len(self._done_traces) > self._done_traces_cap:
+                        self._done_traces.pop(next(iter(self._done_traces)))
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -814,9 +910,10 @@ class LocalPool:
         return self.master.address
 
     def execute(self, scheme, A, B, mask=None, key=None, timeout=None,
-                batch_fill=None):
+                batch_fill=None, trace=None):
         return self.master.execute(scheme, A, B, mask=mask, key=key,
-                                   timeout=timeout, batch_fill=batch_fill)
+                                   timeout=timeout, batch_fill=batch_fill,
+                                   trace=trace)
 
     def stats(self) -> Dict[str, object]:
         """Cumulative pool accounting (shared repro.stats schema)."""

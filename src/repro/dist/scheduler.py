@@ -30,7 +30,8 @@ from typing import Dict, Optional, Tuple
 
 from repro.cdmm.api import CdmmScheme, ProblemSpec
 from repro.cdmm.planner import plan
-from repro.stats import Histogram
+from repro.obs import trace as obs
+from repro.stats import Histogram, StatsSnapshot, namespaced
 
 __all__ = ["PoolScheduler", "SchedulerSaturated", "SchedulerStats"]
 
@@ -64,17 +65,18 @@ class SchedulerStats:
         with self._lock:
             setattr(self, name, getattr(self, name) + 1)
 
-    def snapshot(self) -> Dict[str, object]:
+    def snapshot(self) -> StatsSnapshot:
         """A consistent copy of every counter (taken under the lock — the
         fields themselves may tear when read while dispatchers are bumping
         them) plus the request-latency histogram triple, all in the shared
-        ``repro.stats`` snapshot schema."""
+        ``repro.stats`` snapshot schema (``scheduler_``-prefixed keys;
+        legacy unprefixed names resolve with one DeprecationWarning)."""
         with self._lock:
             snap: Dict[str, object] = {
                 k: getattr(self, k) for k in self._COUNTERS
             }
         snap.update(self.request_ms.snapshot("request_ms"))
-        return snap
+        return namespaced("scheduler", snap)
 
 
 class PoolScheduler:
@@ -148,9 +150,11 @@ class PoolScheduler:
         if scheme is None:
             scheme = self.scheme_for(spec)
         fut: Future = Future()
+        trace = obs.maybe_context("req")
+        fut.trace_id = trace.trace_id if trace is not None else None
         try:
             self._queue.put_nowait(
-                (fut, scheme, A, B, mask, key, time.perf_counter())
+                (fut, scheme, A, B, mask, key, time.perf_counter(), trace)
             )
         except queue.Full:
             self.stats._bump("rejected")
@@ -161,6 +165,19 @@ class PoolScheduler:
         self.stats._bump("submitted")
         return fut
 
+    def trace(self, fut_or_trace_id) -> obs.Timeline:
+        """The merged timeline of one submitted request: queue wait,
+        per-share encode/send, every responder's compute span, decode.
+        Accepts the Future returned by :meth:`submit` (its ``trace_id``
+        attribute) or a trace id string."""
+        tid = getattr(fut_or_trace_id, "trace_id", fut_or_trace_id)
+        if tid is None:
+            raise ValueError(
+                "request was not traced (enable with REPRO_TRACE=1 or "
+                "repro.obs.set_enabled(True) before submit)"
+            )
+        return obs.tracer().timeline(tid)
+
     # -- dispatch ----------------------------------------------------------
 
     def _dispatch_loop(self) -> None:
@@ -168,9 +185,16 @@ class PoolScheduler:
             item = self._queue.get()
             if item is None:
                 return
-            fut, scheme, A, B, mask, key, t_submit = item
+            fut, scheme, A, B, mask, key, t_submit, trace = item
             if not fut.set_running_or_notify_cancel():
                 continue
+            if trace is not None:
+                # admission-queue dwell: submit() -> this dispatch slot
+                t1 = obs.now()
+                obs.tracer().add(
+                    trace, "queue_wait", "scheduler",
+                    t1 - (time.perf_counter() - t_submit), t1,
+                )
             # request_timeout is a deadline from submit(): time spent
             # waiting in the admission queue draws down the same budget
             # the pool execution gets, so a saturated scheduler fails
@@ -190,6 +214,7 @@ class PoolScheduler:
             try:
                 C, _ = self.master.execute(
                     scheme, A, B, mask=mask, key=key, timeout=remaining,
+                    trace=trace,
                 )
                 self.stats._bump("completed")
                 self.stats.request_ms.observe(

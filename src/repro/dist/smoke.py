@@ -10,6 +10,13 @@ straggler budget, parks every worker's compute long enough for the kill to
 land provably mid-request, SIGKILLs ``--kill`` workers while the request
 is in flight, and asserts the decoded product still equals the plain
 ``A @ B`` oracle bit for bit.  Exit code 0 = pass.
+
+With ``--trace`` the killed request runs under a :mod:`repro.obs` trace
+and the merged timeline is validated against the span schema: non-empty,
+monotone span times, per-worker compute spans from at least R responders,
+and — when workers were killed — a re-dispatched send span proving the
+dead worker's share moved.  ``--trace-out PATH`` additionally writes the
+timeline in Chrome ``trace_event`` format (load via chrome://tracing).
 """
 from __future__ import annotations
 
@@ -28,10 +35,17 @@ def run_smoke(
     size: int = 32,
     delay_ms: float = 400.0,
     seed: int = 0,
+    trace: bool = False,
+    trace_out: str = "",
 ) -> int:
     from repro.cdmm import ProblemSpec, coded_matmul, plan
     from repro.core import make_ring
     from repro.dist import LocalPool, PoolBackend
+
+    if trace:
+        from repro import obs
+
+        obs.set_enabled(True)
 
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
@@ -63,10 +77,25 @@ def run_smoke(
         for wid in pool.master.live_workers():
             pool.master.task_delay_ms[wid] = delay_ms
         result: dict = {}
+        ctx = None
+        if trace:
+            from repro import obs
+
+            ctx = obs.TraceContext.new("smoke")
 
         def _request():
             try:
-                result["C"] = np.asarray(coded_matmul(A, B, scheme, backend=be))
+                if ctx is not None:
+                    # explicit context so the smoke can fetch the timeline
+                    # by trace_id after the race resolves
+                    C, result["stats"] = pool.master.execute(
+                        scheme, A, B, trace=ctx
+                    )
+                    result["C"] = np.asarray(C)
+                else:
+                    result["C"] = np.asarray(
+                        coded_matmul(A, B, scheme, backend=be)
+                    )
             except Exception as e:  # surfaced below
                 result["err"] = e
 
@@ -85,10 +114,40 @@ def run_smoke(
         if not np.array_equal(result["C"], oracle):
             print("FAIL: post-kill decode != oracle")
             return 1
-        stats = be.last_stats
+        stats = result.get("stats", be.last_stats)
         print(f"decoded from shares {stats.live_idx} "
               f"({stats.redispatched} re-dispatched) in {stats.wall_ms:.0f} ms "
               f"with {pool.alive_count()}/{workers} workers alive")
+        if ctx is not None:
+            from repro import obs
+
+            timeline = obs.tracer().timeline(ctx.trace_id)
+            problems = obs.validate_timeline(
+                timeline.to_json(),
+                min_workers=scheme.R,
+                require_components=("pool", "worker"),
+            )
+            sends = [s for s in timeline.spans if s.name == "send"]
+            if kill and not any(s.tags.get("redispatch") for s in sends):
+                problems.append(
+                    f"{kill} worker(s) killed but no redispatched send span"
+                )
+            if problems:
+                for p in problems:
+                    print(f"FAIL trace: {p}")
+                return 1
+            lanes = {
+                s.tags.get("wid") for s in timeline.spans
+                if s.name == "compute"
+            }
+            print(f"trace {timeline.trace_id}: {len(timeline.spans)} spans, "
+                  f"{timeline.wall_s * 1e3:.0f} ms wall, compute lanes "
+                  f"{sorted(lanes)}, {sum(s.tags.get('redispatch', False) for s in sends)}"
+                  f" redispatched send span(s)")
+            if trace_out:
+                with open(trace_out, "w") as f:
+                    f.write(obs.to_chrome_trace(timeline, indent=1))
+                print(f"chrome trace_event JSON written to {trace_out}")
     print("POOL SMOKE OK: decode bit-identical to the oracle after "
           f"{kill} mid-request SIGKILL(s)")
     return 0
@@ -101,9 +160,14 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--delay-ms", type=float, default=400.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="trace the killed request and validate the "
+                         "merged span timeline")
+    ap.add_argument("--trace-out", default="",
+                    help="write the timeline as Chrome trace_event JSON")
     args = ap.parse_args(argv)
     return run_smoke(args.workers, args.kill, args.size, args.delay_ms,
-                     args.seed)
+                     args.seed, trace=args.trace, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

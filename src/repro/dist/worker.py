@@ -46,6 +46,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import now as obs_now
+
 from .protocol import (
     PROTOCOL_VERSION,
     ProtocolError,
@@ -83,6 +85,10 @@ def _capabilities() -> Dict:
         # per connection (absent = v0 peer = raw)
         "codecs": list(supported_codecs()),
         "streaming": True,
+        # understands the optional "trace" task-header field and ships
+        # compute spans back on result frames (absent = v0 peer: the
+        # master synthesizes a span from wall_us instead)
+        "tracing": True,
         "autotune": {"entries": entries, "device_entries": coverage},
     }
 
@@ -96,6 +102,7 @@ class _StreamState:
         self.h: Optional[np.ndarray] = None
         self.wall_us = 0.0
         self.failed = False
+        self.t0 = obs_now()  # span start when the task is traced
 
 
 class WorkerRuntime:
@@ -164,7 +171,8 @@ class WorkerRuntime:
                 return  # master gone; the main loop notices on recv
 
     def _reply(self, header: Dict, ok: bool, h=None, err: str = "",
-               wall_us: float = 0.0) -> None:
+               wall_us: float = 0.0, t0: Optional[float] = None,
+               streamed: int = 0) -> None:
         reply = {
             "type": "result",
             "req": header["req"],
@@ -173,6 +181,18 @@ class WorkerRuntime:
             "ok": ok,
             "wall_us": wall_us,
         }
+        if header.get("trace") and t0 is not None:
+            # piggyback the compute span on the result frame; the master
+            # re-stamps it with the request's trace id and worker id
+            tags: Dict = {"pid": os.getpid(), "ok": ok}
+            if streamed:
+                # streamed tasks: span covers arrival..final-chunk wall,
+                # busy_us is the actual accumulated compute inside it
+                tags["streamed"] = streamed
+                tags["busy_us"] = round(wall_us, 1)
+            reply["spans"] = [{
+                "name": "compute", "t0": t0, "t1": obs_now(), "tags": tags,
+            }]
         out = {}
         if ok:
             out["h"] = np.asarray(h)
@@ -204,9 +224,11 @@ class WorkerRuntime:
                 state.failed = True
                 self._reply(header, ok=False,
                             err=f"{type(e).__name__}: {e}",
-                            wall_us=(time.perf_counter() - t0) * 1e6)
+                            wall_us=(time.perf_counter() - t0) * 1e6,
+                            t0=state.t0, streamed=stream)
             self._streams[key] = state
             return
+        tw0 = obs_now()
         t0 = time.perf_counter()
         try:
             self._apply_injection(header)
@@ -219,10 +241,10 @@ class WorkerRuntime:
             h = fn(arrays["fa"], arrays["gb"])
         except Exception as e:  # computation errors surface at the master
             self._reply(header, ok=False, err=f"{type(e).__name__}: {e}",
-                        wall_us=(time.perf_counter() - t0) * 1e6)
+                        wall_us=(time.perf_counter() - t0) * 1e6, t0=tw0)
             return
         self._reply(header, ok=True, h=h,
-                    wall_us=(time.perf_counter() - t0) * 1e6)
+                    wall_us=(time.perf_counter() - t0) * 1e6, t0=tw0)
 
     def _handle_chunk(self, header: Dict, arrays: Dict) -> None:
         key = (header.get("req"), header.get("task"))
@@ -247,14 +269,16 @@ class WorkerRuntime:
                 state.wall_us += (time.perf_counter() - t0) * 1e6
                 self._reply(state.header, ok=False,
                             err=f"{type(e).__name__}: {e}",
-                            wall_us=state.wall_us)
+                            wall_us=state.wall_us, t0=state.t0,
+                            streamed=int(state.header.get("stream", 0)))
             else:
                 state.wall_us += (time.perf_counter() - t0) * 1e6
         if last:
             self._streams.pop(key, None)
             if not state.failed:
                 self._reply(state.header, ok=True, h=state.h,
-                            wall_us=state.wall_us)
+                            wall_us=state.wall_us, t0=state.t0,
+                            streamed=int(state.header.get("stream", 0)))
 
     def serve(self) -> int:
         self._send({"type": "hello", "name": self.name, **_capabilities()})

@@ -154,7 +154,8 @@ def coded_matmul_demo(
 def batch_serving_demo(
     requests: int = 32, size: int = 64, pool_workers: int = 6,
     wait_ms: float = 50.0, target_batch: int = 8, privacy_t: int = 0,
-    stats_every: float = 0.0, seed: int = 0,
+    stats_every: float = 0.0, seed: int = 0, trace: bool = False,
+    trace_out: str = "",
 ) -> Dict[str, Any]:
     """Continuous-batching serving in one function: ``requests`` concurrent
     same-shape matmuls through :class:`repro.serve.ServeScheduler` over a
@@ -163,16 +164,22 @@ def batch_serving_demo(
     ``"amortized"`` objective says one batch job beats per-request
     dispatch.  ``stats_every > 0`` prints a MERGED stats snapshot every
     that many seconds while requests are in flight: the engine's
-    ``ServeStats`` (fill, wait quantiles) and the pool master's transport
-    accounting (``pool_``-prefixed: bytes on wire vs pre-codec raw,
-    time-to-R quantiles) in one shared-schema dict.
+    ``ServeStats`` (``serve_``-prefixed: fill, wait quantiles) and the
+    pool master's transport accounting (``pool_``-prefixed: bytes on wire
+    vs pre-codec raw, time-to-R quantiles) in one shared-schema dict.
+    ``trace=True`` records per-request span timelines (:mod:`repro.obs`)
+    and returns the last request's merged timeline; ``trace_out`` also
+    writes it as Chrome ``trace_event`` JSON for about://tracing.
     """
     import json
 
+    from repro import obs
     from repro.dist import PoolConfig
     from repro.serve import CoalescePolicy, ServeScheduler
     from repro.stats import merge_snapshots
 
+    if trace:
+        obs.set_enabled(True)
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
         t=size, r=size, s=size, n=1, ring=Z32, N=pool_workers,
@@ -188,11 +195,10 @@ def batch_serving_demo(
     )
 
     def merged_stats(sched):
-        pool_snap = {
-            f"pool_{k}": v for k, v in sched.master.stats().items()
-        }
-        return merge_snapshots(sched.stats.snapshot(), pool_snap)
+        # both snapshots arrive pre-prefixed (serve_* / pool_*)
+        return merge_snapshots(sched.stats.snapshot(), sched.master.stats())
 
+    timeline = None
     with ServeScheduler(
         config=PoolConfig(workers=pool_workers), policy=policy,
         max_queue=requests, seed=seed,
@@ -204,19 +210,30 @@ def batch_serving_demo(
                 snap = merged_stats(sched)
                 print(json.dumps({
                     k: snap[k] for k in (
-                        "submitted", "completed", "batches",
-                        "mean_fill", "wait_ms_p50", "wait_ms_p99",
+                        "serve_submitted", "serve_completed",
+                        "serve_batches", "serve_mean_fill",
+                        "serve_wait_ms_p50", "serve_wait_ms_p99",
                         "pool_completed", "pool_bytes_out",
                         "pool_raw_bytes_out", "pool_time_to_R_ms_p50",
                     )
                 }))
         results = [np.asarray(f.result(timeout=600)) for f in futs]
         snap = merged_stats(sched)
+        if trace:
+            timeline = sched.trace(futs[-1])
     ok = all(
         np.array_equal(C, np.asarray(Z32.matmul(A, B)))
         for C, (A, B) in zip(results, pairs)
     )
-    return {"bit_identical": ok, "stats": snap}
+    out: Dict[str, Any] = {"bit_identical": ok, "stats": snap}
+    if timeline is not None:
+        out["timeline"] = timeline
+        if trace_out:
+            with open(trace_out, "w") as f:
+                f.write(obs.to_chrome_trace(timeline, indent=1))
+            print(f"wrote Chrome trace_event timeline to {trace_out} "
+                  f"(load in about://tracing or ui.perfetto.dev)")
+    return out
 
 
 def main():
@@ -267,6 +284,17 @@ def main():
         "histogram quantiles, amortized us/request) this often while "
         "--serve requests are in flight (0 = only the final snapshot)",
     )
+    ap.add_argument(
+        "--trace", action="store_true",
+        help="record per-request span timelines (repro.obs) for --serve: "
+        "admission -> coalesce -> encode -> wire -> per-worker compute -> "
+        "any-R decode; prints a span summary of the last request",
+    )
+    ap.add_argument(
+        "--trace-out", default="", metavar="PATH",
+        help="with --trace: also write the last request's timeline as "
+        "Chrome trace_event JSON (open in about://tracing / perfetto)",
+    )
     args = ap.parse_args()
     t0 = time.time()
     out = greedy_generate(args.arch, smoke=args.smoke, gen_len=args.gen_len)
@@ -278,14 +306,25 @@ def main():
             requests=args.serve, pool_workers=args.pool_workers,
             wait_ms=args.serve_wait_ms, target_batch=args.serve_batch,
             privacy_t=args.privacy_t, stats_every=args.stats_every,
+            trace=args.trace, trace_out=args.trace_out,
         )
         s = demo["stats"]
         print(
             f"batch serving [{args.serve} requests, {args.pool_workers} "
-            f"workers]: {s['batches']} batch jobs, mean fill "
-            f"{s['mean_fill']:.2f}, bit-identical={demo['bit_identical']}"
+            f"workers]: {s['serve_batches']} batch jobs, mean fill "
+            f"{s['serve_mean_fill']:.2f}, bit-identical={demo['bit_identical']}"
         )
-        print(json.dumps(s, indent=2))
+        timeline = demo.get("timeline")
+        if timeline is not None:
+            print(f"last request timeline [{timeline.trace_id}] "
+                  f"({timeline.wall_s * 1e3:.1f} ms wall):")
+            for sp in timeline.spans:
+                rel = (sp.t_start - timeline.t_start) * 1e3
+                wid = sp.tags.get("wid")
+                lane = f" wid={wid}" if wid is not None else ""
+                print(f"  +{rel:8.2f}ms {sp.component:9s} {sp.name:13s} "
+                      f"{sp.duration_s * 1e3:8.2f}ms{lane}")
+        print(json.dumps(s, indent=2, default=str))
     if args.coded:
         demo = coded_matmul_demo(backend=args.coded_backend,
                                  privacy_t=args.privacy_t,

@@ -1,0 +1,45 @@
+"""repro.obs — structured per-request tracing and exporters.
+
+See :mod:`repro.obs.trace` for the span model and
+:mod:`repro.obs.export` for the JSON / Chrome trace_event / Prometheus
+output formats.
+"""
+from repro.obs.export import (
+    to_chrome_trace,
+    to_json,
+    to_prometheus,
+    validate_timeline,
+)
+from repro.obs.trace import (
+    Span,
+    Timeline,
+    TraceContext,
+    Tracer,
+    enabled,
+    maybe_context,
+    new_trace_id,
+    now,
+    set_enabled,
+    spans_from_wire,
+    spans_to_wire,
+    tracer,
+)
+
+__all__ = [
+    "Span",
+    "Timeline",
+    "TraceContext",
+    "Tracer",
+    "enabled",
+    "maybe_context",
+    "new_trace_id",
+    "now",
+    "set_enabled",
+    "spans_from_wire",
+    "spans_to_wire",
+    "to_chrome_trace",
+    "to_json",
+    "to_prometheus",
+    "tracer",
+    "validate_timeline",
+]

@@ -1,0 +1,184 @@
+"""Exporters and validators for :class:`repro.obs.Timeline`.
+
+Three output formats, one input schema (the span JSON emitted by
+``Timeline.to_json``):
+
+- :func:`to_json` — the canonical schema, round-trippable via
+  ``Timeline.from_json``;
+- :func:`to_chrome_trace` — Chrome ``trace_event`` JSON for
+  ``about://tracing`` / https://ui.perfetto.dev: complete ("X") events,
+  one process lane per component and one thread lane per worker, so the
+  any-R race is visible as R+ overlapping compute bars;
+- :func:`to_prometheus` — text exposition of a ``repro.stats`` snapshot
+  (counters as ``counter``, ``*_hist`` buckets as cumulative
+  ``histogram`` series) for scrape-style consumers.
+
+:func:`validate_timeline` is the schema check CI runs on ``--trace``
+smoke exports: spans non-empty, every span time-ordered and carrying the
+required fields, and per-worker compute spans present for at least the
+R responders that fed decode.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.trace import Timeline
+
+__all__ = [
+    "to_chrome_trace",
+    "to_json",
+    "to_prometheus",
+    "validate_timeline",
+]
+
+
+def to_json(timeline: Timeline, indent: Optional[int] = None) -> str:
+    """The canonical span-JSON document (see ``Timeline.to_json``)."""
+    return json.dumps(timeline.to_json(), indent=indent, sort_keys=True)
+
+
+def _chrome_tid(span) -> str:
+    wid = span.tags.get("wid")
+    return f"worker {wid}" if wid is not None else "main"
+
+
+def to_chrome_trace(timeline: Timeline, indent: Optional[int] = None) -> str:
+    """Chrome ``trace_event`` JSON: load in about://tracing or Perfetto.
+
+    Lanes: pid = component, tid = worker id (or "main").  Timestamps are
+    microseconds relative to the timeline's first span so the viewer
+    opens at t=0 instead of the 2026 epoch.
+    """
+    t0 = timeline.t_start
+    pids: Dict[str, int] = {}
+    tids: Dict[tuple, int] = {}
+    events: List[Dict] = []
+    for span in timeline.spans:
+        pid = pids.setdefault(span.component, len(pids) + 1)
+        tid = tids.setdefault((span.component, _chrome_tid(span)),
+                              len(tids) + 1)
+        events.append({
+            "name": span.name,
+            "cat": span.component,
+            "ph": "X",
+            "ts": (span.t_start - t0) * 1e6,
+            "dur": span.duration_s * 1e6,
+            "pid": pid,
+            "tid": tid,
+            "args": {k: v for k, v in span.tags.items()},
+        })
+    for component, pid in pids.items():
+        events.append({
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": component},
+        })
+    for (component, label), tid in tids.items():
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pids[component],
+            "tid": tid, "args": {"name": label},
+        })
+    doc = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"trace_id": timeline.trace_id},
+    }
+    return json.dumps(doc, indent=indent)
+
+
+def _prom_name(key: str) -> str:
+    return "repro_" + key.replace(".", "_")
+
+
+def to_prometheus(snapshot: Dict[str, object]) -> str:
+    """Prometheus text exposition of a ``repro.stats`` snapshot.
+
+    Scalar numbers become ``counter`` samples; ``*_hist`` dicts become
+    cumulative ``histogram`` bucket series (the snapshot's per-bucket
+    counts are non-cumulative, so we accumulate here); ``*_p50``/``*_p99``
+    become ``gauge`` samples.  Non-numeric values are skipped.
+    """
+    lines: List[str] = []
+    for key in sorted(snapshot):
+        val = snapshot[key]
+        if key.endswith("_hist") and isinstance(val, dict):
+            base = _prom_name(key[: -len("_hist")]) + "_ms"
+            lines.append(f"# TYPE {base} histogram")
+            cum = 0
+            total = 0
+            for bucket, count in val.items():
+                if not isinstance(count, (int, float)):
+                    continue
+                total += count
+                le = bucket[2:] if bucket.startswith("<=") else bucket
+                if bucket == "inf" or le == "inf":
+                    continue
+                cum += count
+                lines.append(f'{base}_bucket{{le="{le}"}} {cum}')
+            lines.append(f'{base}_bucket{{le="+Inf"}} {total}')
+            lines.append(f"{base}_count {total}")
+        elif key.endswith(("_p50", "_p99")) and isinstance(val, (int, float)):
+            name = _prom_name(key)
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {val}")
+        elif isinstance(val, bool):
+            continue
+        elif isinstance(val, (int, float)):
+            name = _prom_name(key)
+            lines.append(f"# TYPE {name} counter")
+            lines.append(f"{name} {val}")
+    return "\n".join(lines) + "\n"
+
+
+_REQUIRED_SPAN_FIELDS = ("trace_id", "name", "component", "t_start", "t_end")
+
+
+def validate_timeline(
+    doc: Dict,
+    min_workers: int = 0,
+    require_components: Sequence[str] = (),
+) -> List[str]:
+    """Schema-check an exported span-JSON document.
+
+    Returns a list of human-readable problems (empty = valid):
+    spans present, every span carrying the required fields with
+    ``t_end >= t_start``, at least ``min_workers`` distinct worker ids
+    among compute spans, and every component in ``require_components``
+    represented.
+    """
+    problems: List[str] = []
+    spans = doc.get("spans")
+    if not isinstance(spans, list) or not spans:
+        return ["timeline has no spans"]
+    wids = set()
+    components = set()
+    for i, s in enumerate(spans):
+        if not isinstance(s, dict):
+            problems.append(f"span[{i}] is not an object")
+            continue
+        missing = [f for f in _REQUIRED_SPAN_FIELDS if f not in s]
+        if missing:
+            problems.append(f"span[{i}] missing fields {missing}")
+            continue
+        if not (isinstance(s["t_start"], (int, float))
+                and isinstance(s["t_end"], (int, float))):
+            problems.append(f"span[{i}] has non-numeric times")
+            continue
+        if s["t_end"] < s["t_start"]:
+            problems.append(
+                f"span[{i}] ({s['name']}) ends before it starts: "
+                f"{s['t_end']} < {s['t_start']}"
+            )
+        components.add(s["component"])
+        tags = s.get("tags", {})
+        if s["name"] == "compute" and "wid" in tags:
+            wids.add(tags["wid"])
+    if len(wids) < min_workers:
+        problems.append(
+            f"expected compute spans from >= {min_workers} workers, "
+            f"saw {len(wids)} ({sorted(map(str, wids))})"
+        )
+    for comp in require_components:
+        if comp not in components:
+            problems.append(f"no spans from component {comp!r}")
+    return problems

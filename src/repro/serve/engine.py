@@ -44,6 +44,7 @@ import numpy as np
 from repro.cdmm.api import CdmmScheme, ProblemSpec, get_scheme
 from repro.cdmm.planner import plan
 from repro.dist.scheduler import SchedulerSaturated
+from repro.obs import trace as obs
 
 from .coalescer import BatchCoalescer, CoalescePolicy
 from .stats import ServeStats
@@ -62,6 +63,8 @@ class _Member:
     B: np.ndarray
     key: Optional[object]
     t_submit: float
+    rid: int = -1
+    trace: Optional[obs.TraceContext] = None
 
 
 @dataclass
@@ -119,6 +122,13 @@ class ServeScheduler:
         self._entries_lock = threading.Lock()
         self._key_lock = threading.Lock()
         self._batch_seq = 0
+        self._next_rid = 0
+        # rid -> (request trace_id, carrier trace_id): a coalesced batch
+        # records its pool spans once under the first member's trace (the
+        # "carrier"); trace(rid) merges both (bounded, oldest roll off)
+        self._trace_index: Dict[int, tuple] = {}
+        self._trace_lock = threading.Lock()
+        self._trace_index_cap = 1024
         import jax.random
 
         if seed is None:
@@ -198,12 +208,20 @@ class ServeScheduler:
             raise RuntimeError("scheduler is closed")
         entry = self.entry_for(spec)
         fut: Future = Future()
+        with self._trace_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        trace = obs.maybe_context("serve", request_id=rid)
+        fut.request_id = rid
+        fut.trace_id = trace.trace_id if trace is not None else None
         member = _Member(
             fut=fut,
             A=np.asarray(A),
             B=np.asarray(B),
             key=key,
             t_submit=time.perf_counter(),
+            rid=rid,
+            trace=trace,
         )
         try:
             self._queue.put_nowait((entry, member))
@@ -307,6 +325,29 @@ class ServeScheduler:
         key = None
         if scheme.privacy_t > 0:
             key = self._batch_key(active)
+        # one batch = one pool execution: its pool/worker spans record
+        # once, under the first traced member (the carrier); every
+        # member's trace(rid) merges the carrier timeline back in
+        carrier = next((m.trace for m in active if m.trace is not None),
+                       None)
+        if carrier is not None:
+            t_now = obs.now()
+            tracer = obs.tracer()
+            with self._trace_lock:
+                for m in active:
+                    if m.trace is None:
+                        continue
+                    self._trace_index[m.rid] = (
+                        m.trace.trace_id, carrier.trace_id
+                    )
+                while len(self._trace_index) > self._trace_index_cap:
+                    self._trace_index.pop(next(iter(self._trace_index)))
+            for m, wait_ms in zip(active, waits_ms):
+                tracer.add(
+                    m.trace, "coalesce_wait", "serve",
+                    t_now - wait_ms / 1e3, t_now,
+                    batch=scheme.batch, fill=fill, label=entry.label,
+                )
         try:
             if entry.cap > 1:
                 pad = scheme.batch - fill
@@ -315,7 +356,8 @@ class ServeScheduler:
                 As = np.stack([m.A for m in active] + [zA] * pad)
                 Bs = np.stack([m.B for m in active] + [zB] * pad)
                 C, pstats = self.master.execute(
-                    scheme, As, Bs, key=key, timeout=timeout, batch_fill=fill
+                    scheme, As, Bs, key=key, timeout=timeout,
+                    batch_fill=fill, trace=carrier,
                 )
                 for j, m in enumerate(active):
                     m.fut.set_result(np.asarray(C[j]))
@@ -323,7 +365,7 @@ class ServeScheduler:
                 pad = 0
                 m = active[0]
                 C, pstats = self.master.execute(
-                    scheme, m.A, m.B, key=key, timeout=timeout
+                    scheme, m.A, m.B, key=key, timeout=timeout, trace=carrier
                 )
                 m.fut.set_result(np.asarray(C))
             self.stats.bump("completed", fill)
@@ -338,6 +380,38 @@ class ServeScheduler:
             for m in active:
                 if not m.fut.done():
                     m.fut.set_exception(e)
+
+    # -- tracing -----------------------------------------------------------
+
+    def trace(self, request_id) -> obs.Timeline:
+        """The merged end-to-end timeline of one request: coalesce wait,
+        the batch's per-share encode/send, every responder's compute span
+        (late arrivals and post-SIGKILL re-dispatches included), the
+        any-R wait and decode.
+
+        Accepts the Future returned by :meth:`submit` (its ``request_id``
+        attribute) or the request id itself.  Spans of the batch the
+        request rode in are merged from the carrier trace, so coalesced
+        peers share the same pool/worker spans.  Raises ``KeyError``
+        until the request has dispatched (or if it rolled off the
+        bounded index), ``ValueError`` when tracing was disabled.
+        """
+        if not obs.enabled():
+            raise ValueError(
+                "tracing is disabled (enable with REPRO_TRACE=1, --trace, "
+                "or repro.obs.set_enabled(True) before submit)"
+            )
+        rid = getattr(request_id, "request_id", request_id)
+        with self._trace_lock:
+            pair = self._trace_index.get(rid)
+        if pair is None:
+            raise KeyError(
+                f"request {rid!r} has no dispatched trace (not yet "
+                f"dispatched, never submitted, or rolled off the index)"
+            )
+        tid, carrier_tid = pair
+        linked = (carrier_tid,) if carrier_tid != tid else ()
+        return obs.tracer().timeline(tid, *linked)
 
     # -- lifecycle ---------------------------------------------------------
 

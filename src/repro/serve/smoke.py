@@ -10,6 +10,12 @@ concurrent same-shape requests through :class:`ServeScheduler`, and
 asserts (a) the engine actually coalesced — mean batch fill > 1 under the
 ``"amortized"`` objective's decision — and (b) every per-request result is
 bit-identical to the plain ``A @ B`` oracle.  Exit code 0 = pass.
+
+With ``--trace`` every request runs under a :mod:`repro.obs` trace and the
+last request's merged timeline (serve admission -> coalesce wait -> pool
+encode/send -> per-worker compute -> any-R decode) is validated against
+the span schema: non-empty, monotone span times, compute spans from at
+least R responders.
 """
 from __future__ import annotations
 
@@ -35,11 +41,17 @@ def run_smoke(
     target_batch: int = 8,
     privacy_t: int = 0,
     seed: int = 0,
+    trace: bool = False,
 ) -> int:
     from repro.cdmm import ProblemSpec
     from repro.core import make_ring
     from repro.dist import LocalPool
     from repro.serve import CoalescePolicy, ServeScheduler
+
+    if trace:
+        from repro import obs
+
+        obs.set_enabled(True)
 
     Z32 = make_ring(2, 32, ())
     spec = ProblemSpec(
@@ -67,29 +79,48 @@ def run_smoke(
             futs = [sched.submit(A, B, spec=spec) for A, B in pairs]
             results = [np.asarray(f.result(timeout=600)) for f in futs]
             snap = sched.stats.snapshot()
+            if trace:
+                from repro import obs
+
+                timeline = sched.trace(futs[-1])
+                problems = obs.validate_timeline(
+                    timeline.to_json(),
+                    min_workers=entry.scheme.R,
+                    require_components=("serve", "pool", "worker"),
+                )
+                if problems:
+                    for p in problems:
+                        print(f"FAIL trace: {p}")
+                    return 1
+                comps = sorted({s.component for s in timeline.spans})
+                print(f"trace {timeline.trace_id}: {len(timeline.spans)} "
+                      f"spans across components {comps}, "
+                      f"{timeline.wall_s * 1e3:.0f} ms wall")
 
     bad = [i for i, (C, want) in enumerate(zip(results, oracles))
            if not np.array_equal(C, want)]
     print(json.dumps({k: snap[k] for k in (
-        "submitted", "completed", "batches", "coalesced_batches",
-        "mean_fill", "total_pad", "amortized_us_per_request",
-        "wait_ms_p50", "wait_ms_p99",
+        "serve_submitted", "serve_completed", "serve_batches",
+        "serve_coalesced_batches", "serve_mean_fill", "serve_total_pad",
+        "serve_amortized_us_per_request", "serve_wait_ms_p50",
+        "serve_wait_ms_p99",
     )}, indent=2))
     if bad:
         print(f"FAIL: {len(bad)}/{requests} results differ from the "
               f"A @ B oracle (first bad index: {bad[0]})")
         return 1
-    if snap["completed"] != requests:
-        print(f"FAIL: {snap['completed']}/{requests} requests completed")
+    if snap["serve_completed"] != requests:
+        print(f"FAIL: {snap['serve_completed']}/{requests} requests "
+              f"completed")
         return 1
-    if snap["mean_fill"] <= 1.0 or snap["coalesced_batches"] < 1:
+    if snap["serve_mean_fill"] <= 1.0 or snap["serve_coalesced_batches"] < 1:
         print(f"FAIL: engine never coalesced (mean fill "
-              f"{snap['mean_fill']:.2f}, "
-              f"{snap['coalesced_batches']} coalesced batches)")
+              f"{snap['serve_mean_fill']:.2f}, "
+              f"{snap['serve_coalesced_batches']} coalesced batches)")
         return 1
-    print(f"SERVE SMOKE OK: {requests} requests in {snap['batches']} "
-          f"batch jobs (mean fill {snap['mean_fill']:.2f}), every result "
-          f"bit-identical to the oracle")
+    print(f"SERVE SMOKE OK: {requests} requests in {snap['serve_batches']} "
+          f"batch jobs (mean fill {snap['serve_mean_fill']:.2f}), every "
+          f"result bit-identical to the oracle")
     return 0
 
 
@@ -102,9 +133,13 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--target-batch", type=int, default=8)
     ap.add_argument("--privacy-t", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="trace every request and validate the last "
+                         "request's merged span timeline")
     args = ap.parse_args(argv)
     return run_smoke(args.workers, args.requests, args.size, args.wait_ms,
-                     args.target_batch, args.privacy_t, args.seed)
+                     args.target_batch, args.privacy_t, args.seed,
+                     trace=args.trace)
 
 
 if __name__ == "__main__":

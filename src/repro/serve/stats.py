@@ -7,9 +7,11 @@ for peers (a fixed-bucket wait-time histogram — admission-to-execution,
 so queue time is never hidden), and what a request effectively costs once
 batch execution is amortized over its fill (``amortized_us_per_request``).
 
-Snapshots follow the shared :mod:`repro.stats` schema — plain counters
-plus the ``wait_ms_hist`` / ``wait_ms_p50`` / ``wait_ms_p99`` triple from
-:class:`repro.stats.Histogram` — so they merge cleanly with the pool
+Snapshots follow the shared :mod:`repro.stats` schema — ``serve_``-
+prefixed counters plus the ``serve_wait_ms_hist`` / ``serve_wait_ms_p50``
+/ ``serve_wait_ms_p99`` triple from :class:`repro.stats.Histogram`
+(legacy unprefixed keys resolve with a one-time deprecation warning) —
+so they merge cleanly with the pool
 master's and scheduler's snapshots via :func:`repro.stats.merge_snapshots`
 (``launch/serve.py --stats-every`` prints the merged view, and
 ``benchmarks/bench_serving.py`` records it next to the unbatched
@@ -22,7 +24,7 @@ import threading
 from collections import deque
 from typing import Dict, Sequence, Tuple
 
-from repro.stats import Histogram
+from repro.stats import Histogram, StatsSnapshot, namespaced
 
 __all__ = ["ServeStats", "WAIT_BUCKETS_MS"]
 
@@ -88,11 +90,12 @@ class ServeStats:
 
     # -- reading -----------------------------------------------------------
 
-    def snapshot(self) -> Dict:
-        """A plain-dict copy of every counter, taken under the lock, plus
-        the derived serving signals (mean fill, wait quantiles, amortized
-        us/request) in the shared repro.stats schema.  Safe to call from
-        any thread at any time."""
+    def snapshot(self) -> StatsSnapshot:
+        """A copy of every counter, taken under the lock, plus the derived
+        serving signals (mean fill, wait quantiles, amortized us/request)
+        in the shared repro.stats schema (``serve_``-prefixed keys; the
+        legacy unprefixed names resolve with one DeprecationWarning).
+        Safe to call from any thread at any time."""
         with self._lock:
             counters = {
                 k: getattr(self, k)
@@ -116,4 +119,4 @@ class ServeStats:
         )
         counters.update(self.wait_ms.snapshot("wait_ms"))
         counters["recent_batches"] = recent
-        return counters
+        return namespaced("serve", counters)

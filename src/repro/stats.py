@@ -15,6 +15,15 @@ the shared snapshot contract they all emit:
   the wire and ``raw_bytes_in`` / ``raw_bytes_out`` for the pre-codec
   payload sizes, so ``raw/wire`` is the observed compression ratio.
 
+Every key is **component-prefixed**: ``<component>_<metric>`` with
+``component`` one of ``serve`` / ``scheduler`` / ``pool``
+(``serve_completed``, ``pool_bytes_out``, ``scheduler_request_ms_p99``),
+so merged reports from several components never collide.
+:func:`namespaced` applies the prefix to a raw snapshot, and
+:class:`StatsSnapshot` resolves the historical unprefixed names
+(``snap["completed"]``) with a one-time ``DeprecationWarning`` so
+``--stats-every`` consumers keep working across the rename.
+
 :class:`Histogram` produces the triple; :func:`merge_snapshots` combines
 snapshots from several components (e.g. the serving engine + the pool
 master) into one report, summing counters and bucket counts and
@@ -25,7 +34,16 @@ from __future__ import annotations
 import threading
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
-__all__ = ["BUCKETS_MS", "Histogram", "merge_snapshots", "quantile_from_hist"]
+from repro.settings import warn_deprecated_once
+
+__all__ = [
+    "BUCKETS_MS",
+    "Histogram",
+    "StatsSnapshot",
+    "merge_snapshots",
+    "namespaced",
+    "quantile_from_hist",
+]
 
 # shared latency bucket bounds (ms); inf catches the long tail
 BUCKETS_MS: Tuple[float, ...] = (
@@ -110,6 +128,69 @@ def quantile_from_hist(hist: Dict[str, int], q: float) -> Optional[float]:
     return cap  # pragma: no cover - fp slack
 
 
+class StatsSnapshot(dict):
+    """A schema-conforming snapshot that still answers legacy key names.
+
+    Keys are stored component-prefixed (``serve_completed``).  Indexing
+    with a historical unprefixed name (``snap["completed"]``) resolves
+    through the alias table built at construction and emits one
+    ``DeprecationWarning`` per process per alias; iteration and ``dict()``
+    only ever expose the canonical names.
+    """
+
+    def __init__(self, data: Dict[str, object],
+                 aliases: Optional[Dict[str, str]] = None):
+        super().__init__(data)
+        self._aliases = dict(aliases or {})
+
+    def __missing__(self, key):
+        target = self._aliases.get(key)
+        if target is None or target not in self:
+            raise KeyError(key)
+        warn_deprecated_once(
+            f"stats:{key}",
+            f"stats key {key!r} is deprecated; read {target!r} instead",
+        )
+        return self[target]
+
+    def __contains__(self, key) -> bool:
+        if super().__contains__(key):
+            return True
+        target = self._aliases.get(key)
+        return target is not None and super().__contains__(target)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+
+def namespaced(
+    component: str,
+    snap: Dict[str, object],
+    extra_aliases: Optional[Dict[str, str]] = None,
+) -> StatsSnapshot:
+    """Prefix every key of ``snap`` with ``<component>_`` and wrap it so
+    the unprefixed names still resolve (with a deprecation warning).
+
+    Idempotent per key: a key already starting with the prefix is kept
+    as-is, so callers that pre-prefixed by hand don't double up.
+    """
+    prefix = f"{component}_"
+    data: Dict[str, object] = {}
+    aliases: Dict[str, str] = {}
+    for key, val in snap.items():
+        if key.startswith(prefix):
+            data[key] = val
+        else:
+            data[prefix + key] = val
+            aliases[key] = prefix + key
+    if extra_aliases:
+        aliases.update(extra_aliases)
+    return StatsSnapshot(data, aliases)
+
+
 def merge_snapshots(*snaps: Dict[str, object]) -> Dict[str, object]:
     """Merge schema-conforming snapshots into one combined report.
 
@@ -148,4 +229,10 @@ def merge_snapshots(*snaps: Dict[str, object]) -> Dict[str, object]:
     for key, val in quantiles.items():
         if f"{key[:-len('_p50')]}_hist" not in hists:  # _p99 same length
             merged[key] = val
+    aliases: Dict[str, str] = {}
+    for snap in snaps:
+        if isinstance(snap, StatsSnapshot):
+            aliases.update(snap._aliases)
+    if aliases:
+        return StatsSnapshot(merged, aliases)
     return merged

@@ -210,7 +210,9 @@ def _spawn_sweep(backend: str):
     )
 
 
-if os.environ.get("REPRO_CONFORMANCE_INPROC") == "1":
+from repro import settings as repro_settings  # noqa: E402
+
+if repro_settings.get_bool("conformance_inproc"):
 
     @pytest.mark.parametrize("backend", _backend_params())
     @pytest.mark.parametrize("name", sorted(registered_schemes()))
