@@ -149,6 +149,13 @@ class PoolConfig:
     ``stream_chunk_bytes`` > 0 pipelines share transfer in chunks of
     roughly that many raw bytes so encode/transfer/compute overlap
     (0 disables streaming).
+
+    Telemetry/hedging (None = resolve from the matching ``repro.settings``
+    knob): ``obs_http_port`` starts the embedded admin server
+    (:mod:`repro.obs.http`; 0 = ephemeral port), ``hedge_factor`` > 0
+    enables speculative re-dispatch of shares outstanding past
+    p95(recent round-trips) x factor, ``health_ewma`` smooths the
+    per-worker health signals feeding dispatch order and hedging.
     """
 
     workers: int = 4
@@ -162,6 +169,9 @@ class PoolConfig:
     request_timeout: Optional[float] = None
     use_kernel: Optional[bool] = None
     spawn_timeout: float = 120.0
+    obs_http_port: Optional[int] = None
+    hedge_factor: Optional[float] = None
+    health_ewma: Optional[float] = None
 
     def __post_init__(self):
         if isinstance(self.endpoint, str):
@@ -226,4 +236,12 @@ class PoolConfig:
         chunk = settings.get_int("dist_stream_chunk", env)
         if chunk is not None and "stream_chunk_bytes" not in kw:
             kw["stream_chunk_bytes"] = chunk
+        for name, getter in (
+            ("obs_http_port", settings.get_int),
+            ("hedge_factor", settings.get_float),
+            ("health_ewma", settings.get_float),
+        ):
+            val = getter(name, env)
+            if val is not None and name not in kw:
+                kw[name] = val
         return cls(**kw)

@@ -58,10 +58,14 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import settings
 from repro.cdmm.elastic import NotEnoughResponders, decode_responses, worker_closures
 from repro.core.straggler import MembershipEvents
+from repro.obs import http as obs_http
 from repro.obs import trace as obs
-from repro.stats import Histogram, StatsSnapshot, namespaced
+from repro.obs.health import DISPATCH_THRESHOLD, HealthTracker
+from repro.obs.metrics import MetricsRegistry
+from repro.stats import StatsSnapshot
 
 from .config import Endpoint, PoolConfig, warn_deprecated_once
 from .protocol import Channel, ProtocolError, listen, negotiate
@@ -98,6 +102,7 @@ class PoolStats:
     redispatched: int  # shares re-shipped after a worker death
     wall_ms: float  # master wall-clock for the call
     time_to_R_ms: float  # wall-clock until the R-th response landed
+    hedged: int = 0  # shares speculatively re-shipped past their deadline
     batch: int = 1  # products the scheme packs per codeword (RMFE slots)
     fill: int = 1  # slots carrying real requests (rest were zero padding)
     # bandwidth accounting (shared schema: raw = pre-codec payload bytes,
@@ -120,6 +125,9 @@ class _WorkerHandle:
         self.alive = True
         self.last_seen = time.time()
         self.send_lock = threading.Lock()
+        # worker-published load figures (heartbeat piggyback)
+        self.tasks_done = 0
+        self.busy_us = 0.0
 
     def send(self, header: Dict, arrays=None,
              codec: Optional[str] = None) -> Tuple[int, int]:
@@ -137,9 +145,14 @@ class _Request:
         self.trace = trace
         self.events: "queue.Queue" = queue.Queue()
         self.lock = threading.Lock()
-        # task_id -> (share index, fa, gb, wid currently assigned)
-        self.pending: Dict[int, Tuple[int, np.ndarray, np.ndarray, int]] = {}
+        # task_id -> (share index, fa, gb, assigned wid, t_sent)
+        self.pending: Dict[
+            int, Tuple[int, np.ndarray, np.ndarray, int, float]
+        ] = {}
         self.redispatched = 0
+        self.satisfied: set = set()  # share indices already answered
+        self.hedged_shares: set = set()  # shares hedged (at most once each)
+        self.hedged = 0
         self.done = False
         # per-request bandwidth accounting (summed into PoolStats)
         self.raw_out = 0
@@ -190,15 +203,73 @@ class Master:
         self._echo_waiters: Dict[int, Tuple[threading.Event, List]] = {}
         self._rr = 0  # round-robin cursor for share -> worker assignment
         self._closed = False
-        # cumulative accounting (shared repro.stats schema; see stats())
-        self._stats_lock = threading.Lock()
-        self._counters = {
-            "requests": 0, "completed": 0, "failed": 0, "redispatched": 0,
-            "raw_bytes_out": 0, "bytes_out": 0,
-            "raw_bytes_in": 0, "bytes_in": 0,
-        }
-        self._wall_hist = Histogram()
-        self._time_to_R_hist = Histogram()
+        # telemetry knobs: explicit config wins, else the settings registry
+        # (REPRO_HEDGE_FACTOR / REPRO_HEALTH_EWMA / REPRO_OBS_HTTP_PORT /
+        # REPRO_OBS_RETENTION)
+        self.hedge_factor = float(
+            cfg.hedge_factor if cfg.hedge_factor is not None
+            else (settings.get_float("hedge_factor") or 0.0)
+        )
+        health_ewma = float(
+            cfg.health_ewma if cfg.health_ewma is not None
+            else (settings.get_float("health_ewma") or 0.2)
+        )
+        retention_s = float(settings.get_float("obs_retention") or 300.0)
+        # cumulative accounting: a live MetricsRegistry the dispatch and
+        # result paths record into inline; stats() reads it (shared
+        # repro.stats schema, pool_-prefixed)
+        self.metrics = MetricsRegistry("pool", retention_s=retention_s)
+        for name, doc in (
+            ("requests", "coded-matmul requests started on this pool"),
+            ("completed", "requests decoded successfully"),
+            ("failed", "requests that raised"),
+            ("redispatched", "shares re-shipped after a worker death"),
+            ("hedged", "shares speculatively re-shipped past the hedge "
+                       "deadline"),
+            ("hedge_wasted", "hedged shares whose extra reply lost the "
+                             "race (duplicate discarded)"),
+            ("raw_bytes_out", "share payload bytes before the wire codec"),
+            ("bytes_out", "bytes actually sent on the wire"),
+            ("raw_bytes_in", "result payload bytes before the wire codec"),
+            ("bytes_in", "bytes actually received on the wire"),
+            ("heartbeats", "worker heartbeat messages received"),
+        ):
+            self.metrics.counter(name, doc)
+        self._wall_hist = self.metrics.histogram(
+            "wall_ms", "request wall-clock (ms)"
+        )
+        self._time_to_R_hist = self.metrics.histogram(
+            "time_to_R_ms", "dispatch -> R-th response (ms)"
+        )
+        self.metrics.gauge("workers_live", "live workers in the pool")
+        self.metrics.gauge(
+            "worker_health",
+            "per-worker health score in (0, 1]: EWMA share round-trip "
+            "and heartbeat jitter vs the pool median",
+            label="wid",
+        )
+        self.metrics.gauge(
+            "worker_tasks_done", "tasks completed, as self-reported on "
+            "the worker's last heartbeat", label="wid",
+        )
+        # per-worker health: share round-trips land in _route_result,
+        # heartbeat jitter in _reader_loop; dispatch ordering and the
+        # hedge deadline both read it
+        self.health = HealthTracker(
+            alpha=health_ewma, retention_s=retention_s
+        )
+        # the admin HTTP plane: source/resolver registration is
+        # unconditional (cheap, lets an externally started server see this
+        # master); the server itself starts only when a port is configured
+        self._obs_source = obs_http.register_source("pool", self.stats)
+        obs_http.register_trace_resolver(self._resolve_trace)
+        self._obs_server = None
+        obs_port = (
+            cfg.obs_http_port if cfg.obs_http_port is not None
+            else settings.get_int("obs_http_port")
+        )
+        if obs_port is not None:
+            self._obs_server = obs_http.start_server(obs_port)
         # rid -> trace_id of recently finished traced requests, so spans
         # from stragglers that answer after the any-R decode still land
         # on the right timeline (bounded: oldest entries roll off)
@@ -266,6 +337,14 @@ class Master:
                 if kind == "result":
                     self._account(raw_bytes_in=raw, bytes_in=wire)
                     self._route_result(handle, header, arrays, raw, wire)
+                elif kind == "heartbeat":
+                    # heartbeat inter-arrival jitter is a health signal:
+                    # a stuttering worker is struggling long before it
+                    # trips the death deadline
+                    self.health.record_heartbeat(handle.wid)
+                    handle.tasks_done = int(header.get("tasks_done", 0))
+                    handle.busy_us = float(header.get("busy_us", 0.0))
+                    self._account(heartbeats=1)
                 elif kind == "echo_reply":
                     with self._lock:
                         waiter = self._echo_waiters.pop(
@@ -300,6 +379,7 @@ class Master:
             self._workers.pop(handle.wid, None)
             requests = list(self._requests.values())
         self.membership.record_leave(handle.wid, time.time())
+        self.health.forget(handle.wid)
         _shutdown_socket(handle.sock)
         for req in requests:
             self._redispatch(req, handle.wid)
@@ -326,9 +406,16 @@ class Master:
                 req.trace.trace_id, handle, header, wire, late=False
             )
         with req.lock:
-            req.pending.pop(header.get("task"), None)
+            entry = req.pending.pop(header.get("task"), None)
             req.raw_in += raw
             req.wire_in += wire
+        if entry is not None and header.get("ok"):
+            # master-observed send->result round-trip: the health signal
+            # covering comm + compute in one number (hedged duplicates
+            # measure too — both round-trips really happened)
+            self.health.record_share(
+                handle.wid, (time.perf_counter() - entry[4]) * 1e3
+            )
         self.membership.record_response(
             handle.wid, float(header.get("wall_us", 0.0)) / 1e3
         )
@@ -391,24 +478,54 @@ class Master:
         """The observed membership history as a real WorkerTrace."""
         return self.membership.trace()
 
-    def _account(self, **deltas: int) -> None:
-        with self._stats_lock:
-            for k, v in deltas.items():
-                self._counters[k] += v
+    def _account(self, **deltas) -> None:
+        for k, v in deltas.items():
+            self.metrics.counter(k).inc(v)
 
     def stats(self) -> StatsSnapshot:
         """Cumulative master accounting in the shared ``repro.stats``
         snapshot schema (``pool_``-prefixed keys): counters,
         ``pool_bytes_in/out`` vs ``pool_raw_bytes_in/out`` (on-wire vs
-        pre-codec), and ``pool_wall_ms``/``pool_time_to_R_ms`` histograms
-        with p50/p99.  Legacy unprefixed keys still resolve (with one
-        DeprecationWarning per key)."""
-        with self._stats_lock:
-            snap: Dict[str, object] = dict(self._counters)
-        snap["workers_live"] = len(self.live_workers())
-        snap.update(self._wall_hist.snapshot("wall_ms"))
-        snap.update(self._time_to_R_hist.snapshot("time_to_R_ms"))
-        return namespaced("pool", snap)
+        pre-codec), ``pool_wall_ms``/``pool_time_to_R_ms`` histograms
+        with p50/p99/sum, and the live gauges (``pool_workers_live``,
+        per-worker ``pool_worker_health_by_wid`` scores).  Legacy
+        unprefixed keys still resolve (with one DeprecationWarning per
+        key)."""
+        with self._lock:
+            live = {
+                w: h for w, h in self._workers.items() if h.alive
+            }
+        self.metrics.gauge("workers_live").set(len(live))
+        scores = self.health.scores()
+        health_gauge = self.metrics.gauge("worker_health")
+        tasks_gauge = self.metrics.gauge("worker_tasks_done")
+        health_gauge.clear_labels(keep=list(live))
+        tasks_gauge.clear_labels(keep=list(live))
+        for wid, handle in live.items():
+            health_gauge.set(round(scores.get(wid, 1.0), 4), key=wid)
+            tasks_gauge.set(handle.tasks_done, key=wid)
+        return self.metrics.snapshot()
+
+    def _resolve_trace(self, key: str):
+        """Map a ``/trace/<key>`` request id to its merged Timeline (or
+        None when this master never saw it).  Accepts the pool's integer
+        request id; raw trace-id strings fall through to the process
+        tracer inside :mod:`repro.obs.http`."""
+        try:
+            rid = int(key)
+        except ValueError:
+            return None
+        with self._lock:
+            req = self._requests.get(rid)
+            tid = (
+                req.trace.trace_id
+                if req is not None and req.trace is not None
+                else self._done_traces.get(rid)
+            )
+        if tid is None:
+            return None
+        timeline = obs.tracer().timeline(tid)
+        return timeline if timeline.spans else None
 
     def wait_for_workers(self, n: int, timeout: float = 60.0) -> None:
         deadline = time.time() + timeout
@@ -465,6 +582,9 @@ class Master:
     # -- dispatch ----------------------------------------------------------
 
     def _pick_worker(self, exclude: Tuple[int, ...] = ()) -> _WorkerHandle:
+        # health read happens before the dispatch lock (the tracker has
+        # its own lock and never takes this one: no ordering cycle)
+        scores = self.health.scores()
         with self._lock:
             live = [
                 h for w, h in sorted(self._workers.items())
@@ -474,8 +594,17 @@ class Master:
                 live = [h for _, h in sorted(self._workers.items()) if h.alive]
             if not live:
                 raise WorkerDied("pool has no live workers")
+            # health-aware ordering: round-robin over the healthy subset;
+            # known-slow workers (score < threshold) only serve when no
+            # healthier worker is available.  With no health data every
+            # score is 1.0 and this is exactly the old pure round-robin.
+            healthy = [
+                h for h in live
+                if scores.get(h.wid, 1.0) >= DISPATCH_THRESHOLD
+            ]
+            pool = healthy or live
             self._rr += 1
-            return live[self._rr % len(live)]
+            return pool[self._rr % len(pool)]
 
     def _stream_chunks(self, fa: np.ndarray, gb: np.ndarray) -> int:
         """How many chunks to pipeline this share in (1 = single message).
@@ -503,6 +632,7 @@ class Master:
         gb: np.ndarray,
         exclude: Tuple[int, ...] = (),
         redispatch: bool = False,
+        hedge: bool = False,
     ) -> int:
         tried = set(exclude)
         while True:
@@ -538,7 +668,9 @@ class Master:
             if handle.wid in self.task_fail_wids:
                 header["inject_fail"] = True
             with req.lock:
-                req.pending[task] = (i, fa, gb, handle.wid)
+                req.pending[task] = (
+                    i, fa, gb, handle.wid, time.perf_counter()
+                )
             try:
                 t_send = obs.now()
                 chunks = self._stream_chunks(fa, gb)
@@ -583,6 +715,7 @@ class Master:
                     wid=handle.wid, share=i, task=task,
                     raw_bytes=raw, wire_bytes=wire, chunks=chunks,
                     codec=handle.codec, redispatch=redispatch,
+                    hedge=hedge,
                 )
                 return handle.wid
             except OSError:
@@ -600,8 +733,10 @@ class Master:
                 return
             orphans = [
                 (task, i, fa, gb)
-                for task, (i, fa, gb, wid) in req.pending.items()
-                if wid == dead_wid
+                for task, (i, fa, gb, wid, _t) in req.pending.items()
+                # a share already satisfied (its hedge or twin answered)
+                # has nothing left to recover
+                if wid == dead_wid and i not in req.satisfied
             ]
             for task, *_ in orphans:
                 req.pending.pop(task, None)
@@ -615,6 +750,54 @@ class Master:
             except WorkerDied as e:
                 req.events.put(("dead", -1, str(e)))
                 return
+
+    def _maybe_hedge(self, req: _Request, scheme, got) -> Optional[float]:
+        """Speculative re-dispatch sweep: any share outstanding past the
+        health-derived deadline (p95 of recent round-trips x
+        ``hedge_factor``) is re-shipped once to a different live worker
+        — *before* the heartbeat timeout would declare its holder dead.
+        First valid reply wins; the duplicate is discarded idempotently
+        in ``execute``.  Returns seconds until the next share becomes
+        hedge-due (None when hedging is off/armed with no evidence), so
+        the wait loop knows how long it may block.
+        """
+        deadline_ms = self.health.hedge_deadline_ms(self.hedge_factor)
+        if deadline_ms is None:
+            return None
+        now_pc = time.perf_counter()
+        due: List[Tuple[int, np.ndarray, np.ndarray, int]] = []
+        next_due: Optional[float] = None
+        with req.lock:
+            for task, (i, fa, gb, wid, t_sent) in req.pending.items():
+                if i in got or i in req.satisfied or i in req.hedged_shares:
+                    continue
+                age_ms = (now_pc - t_sent) * 1e3
+                if age_ms >= deadline_ms:
+                    due.append((i, fa, gb, wid))
+                else:
+                    remain = (deadline_ms - age_ms) / 1e3
+                    if next_due is None or remain < next_due:
+                        next_due = remain
+        for i, fa, gb, wid in due:
+            # hedging needs a genuinely spare worker: another live
+            # process besides the one still holding the share
+            # (_pick_worker's exclude falls back to everyone otherwise)
+            if not (set(self.live_workers()) - {wid}):
+                continue
+            with req.lock:
+                if i in req.satisfied or i in req.hedged_shares:
+                    continue
+                req.hedged_shares.add(i)
+            try:
+                self._send_task(
+                    req, scheme, i, fa, gb, exclude=(wid,), hedge=True
+                )
+            except WorkerDied:
+                continue  # the original dispatch may still answer
+            with req.lock:
+                req.hedged += 1
+            self._account(hedged=1)
+        return next_due
 
     # -- protocol entry point ----------------------------------------------
 
@@ -698,15 +881,38 @@ class Master:
                             f"pool request {rid}: {len(got)}/{R} responses "
                             f"after {timeout}s"
                         )
+                poll = wait
+                if self.hedge_factor > 0:
+                    # hedge sweep, then bound the blocking get by the next
+                    # share's hedge deadline so overdue shares re-ship
+                    # promptly instead of waiting out the request timeout
+                    next_due = self._maybe_hedge(req, scheme, got)
+                    if next_due is None:
+                        next_due = 0.25  # deadline not armed yet: re-check
+                    poll = max(
+                        1e-3,
+                        next_due if poll is None else min(poll, next_due),
+                    )
                 try:
-                    kind, i, payload = req.events.get(timeout=wait)
+                    kind, i, payload = req.events.get(timeout=poll)
                 except queue.Empty:
+                    if self.hedge_factor > 0:
+                        continue  # hedge wakeup; loop top re-checks deadline
                     raise TimeoutError(
                         f"pool request {rid}: {len(got)}/{R} responses "
                         f"after {timeout}s"
                     ) from None
                 if kind == "result":
-                    got[i] = payload
+                    if i in got:
+                        # duplicate reply (a hedge twin, or an error-retry
+                        # racing its original): first valid reply already
+                        # won — discard idempotently
+                        if i in req.hedged_shares:
+                            self._account(hedge_wasted=1)
+                    else:
+                        got[i] = payload
+                        with req.lock:
+                            req.satisfied.add(i)
                 elif kind == "error":
                     # a compute error is a worker failure, not a request
                     # failure: retry the share ONCE on a different worker,
@@ -748,7 +954,7 @@ class Master:
             # the any-R race: dispatch done -> R-th response landed
             tracer.add(trace, "wait_R", "pool", t_wait, obs.now(),
                        R=R, responders=sorted(got),
-                       redispatched=req.redispatched)
+                       redispatched=req.redispatched, hedged=req.hedged)
             t_dec = obs.now()
             C = decode_responses(scheme, got)
             tracer.add(trace, "decode", "pool", t_dec, obs.now(),
@@ -761,6 +967,7 @@ class Master:
                 redispatched=req.redispatched,
                 wall_ms=wall_ms,
                 time_to_R_ms=t_R,
+                hedged=req.hedged,
                 batch=int(getattr(scheme, "batch", 1)),
                 fill=(int(batch_fill) if batch_fill is not None
                       else int(getattr(scheme, "batch", 1))),
@@ -792,6 +999,8 @@ class Master:
         if self._closed:
             return
         self._closed = True
+        obs_http.unregister_source(self._obs_source)
+        obs_http.unregister_trace_resolver(self._resolve_trace)
         with self._lock:
             handles = list(self._workers.values())
             self._workers.clear()

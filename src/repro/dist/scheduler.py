@@ -25,13 +25,14 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.cdmm.api import CdmmScheme, ProblemSpec
 from repro.cdmm.planner import plan
+from repro.obs import http as obs_http
 from repro.obs import trace as obs
-from repro.stats import Histogram, StatsSnapshot, namespaced
+from repro.obs.metrics import MetricsRegistry
+from repro.stats import StatsSnapshot
 
 __all__ = ["PoolScheduler", "SchedulerSaturated", "SchedulerStats"]
 
@@ -42,41 +43,49 @@ class SchedulerSaturated(RuntimeError):
     scheduler buffering without bound."""
 
 
-@dataclass
 class SchedulerStats:
-    submitted: int = 0
-    rejected: int = 0
-    completed: int = 0
-    failed: int = 0
-    timed_out: int = 0
-    plan_cache_hits: int = 0
-    plan_cache_misses: int = 0
-    # submit-to-completion latency in the shared repro.stats schema
-    # (request_ms_hist / request_ms_p50 / request_ms_p99 in snapshots)
-    request_ms: Histogram = field(default_factory=Histogram)
-    _lock: threading.Lock = field(default_factory=threading.Lock)
+    """Scheduler counters, registry-backed for the live telemetry plane.
+
+    Recording is in-line (``_bump`` is one counter ``inc``); the legacy
+    attribute reads (``stats.completed``) and ``snapshot()`` both read
+    the same live :class:`repro.obs.metrics.MetricsRegistry` the HTTP
+    ``/metrics``/``/stats`` endpoints scrape.
+    """
 
     _COUNTERS = (
         "submitted", "rejected", "completed", "failed", "timed_out",
         "plan_cache_hits", "plan_cache_misses",
     )
 
+    def __init__(self) -> None:
+        self.metrics = MetricsRegistry("scheduler")
+        self._counters = {
+            name: self.metrics.counter(name) for name in self._COUNTERS
+        }
+        # submit-to-completion latency in the shared repro.stats schema
+        # (request_ms_hist / _p50 / _p99 / _sum in snapshots)
+        self.request_ms = self.metrics.histogram(
+            "request_ms", "submit -> result latency (ms)"
+        )
+
     def _bump(self, name: str) -> None:
-        with self._lock:
-            setattr(self, name, getattr(self, name) + 1)
+        self._counters[name].inc()
+
+    def __getattr__(self, name: str):
+        # legacy attribute reads (stats.completed == 6) resolve to the
+        # live counter values; __getattr__ only fires for names not in
+        # __dict__, so the instruments above stay ordinary attributes
+        counters = self.__dict__.get("_counters") or {}
+        if name in counters:
+            return counters[name].value
+        raise AttributeError(name)
 
     def snapshot(self) -> StatsSnapshot:
-        """A consistent copy of every counter (taken under the lock — the
-        fields themselves may tear when read while dispatchers are bumping
-        them) plus the request-latency histogram triple, all in the shared
-        ``repro.stats`` snapshot schema (``scheduler_``-prefixed keys;
-        legacy unprefixed names resolve with one DeprecationWarning)."""
-        with self._lock:
-            snap: Dict[str, object] = {
-                k: getattr(self, k) for k in self._COUNTERS
-            }
-        snap.update(self.request_ms.snapshot("request_ms"))
-        return namespaced("scheduler", snap)
+        """Every counter plus the request-latency histogram family, in
+        the shared ``repro.stats`` snapshot schema (``scheduler_``-
+        prefixed keys; legacy unprefixed names resolve with one
+        DeprecationWarning)."""
+        return self.metrics.snapshot()
 
 
 class PoolScheduler:
@@ -94,6 +103,10 @@ class PoolScheduler:
         self.objective = objective
         self.request_timeout = request_timeout
         self.stats = SchedulerStats()
+        # the admin HTTP plane scrapes this scheduler alongside its pool
+        self._obs_source = obs_http.register_source(
+            "scheduler", self.stats.snapshot
+        )
         self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._plans: Dict[Tuple[ProblemSpec, str], CdmmScheme] = {}
         self._plans_lock = threading.Lock()
@@ -233,6 +246,7 @@ class PoolScheduler:
         if self._closed:
             return
         self._closed = True
+        obs_http.unregister_source(self._obs_source)
         if not drain:
             while True:
                 try:

@@ -17,6 +17,12 @@ monotone span times, per-worker compute spans from at least R responders,
 and — when workers were killed — a re-dispatched send span proving the
 dead worker's share moved.  ``--trace-out PATH`` additionally writes the
 timeline in Chrome ``trace_event`` format (load via chrome://tracing).
+
+With ``--obs-http`` the pool starts its embedded admin server on an
+ephemeral port and the smoke scrapes ``/metrics`` *while the killed
+request is in flight*, gating on the strict exposition parser
+(:func:`repro.obs.parse_prometheus`) plus a ``/healthz`` liveness check
+— the acceptance oracle for the live telemetry plane.
 """
 from __future__ import annotations
 
@@ -29,6 +35,46 @@ from typing import Optional
 import numpy as np
 
 
+def _scrape_obs(url: str, min_workers: int) -> list:
+    """Scrape /metrics and /healthz of a live pool; returns problems."""
+    import json
+    import urllib.request
+
+    from repro.obs import parse_prometheus
+
+    problems = []
+    with urllib.request.urlopen(f"{url}/metrics", timeout=10) as resp:
+        text = resp.read().decode()
+    try:
+        families = parse_prometheus(text)
+    except ValueError as e:
+        return [f"/metrics failed strict parsing: {e}"]
+    health = [
+        s for fam in families.values() for s in fam["samples"]
+        if s[0] == "repro_pool_worker_health"
+    ]
+    if len(health) < min_workers:
+        problems.append(
+            f"/metrics has {len(health)} pool_worker_health samples, "
+            f"expected >= {min_workers}"
+        )
+    for name in ("repro_pool_requests", "repro_pool_workers_live"):
+        if name not in families:
+            problems.append(f"/metrics missing family {name}")
+    if "repro_pool_wall_ms" in families:
+        if families["repro_pool_wall_ms"]["type"] != "histogram":
+            problems.append("repro_pool_wall_ms is not a histogram family")
+    else:
+        problems.append("/metrics missing family repro_pool_wall_ms")
+    with urllib.request.urlopen(f"{url}/healthz", timeout=10) as resp:
+        doc = json.loads(resp.read().decode())
+    if not doc.get("ok"):
+        problems.append(f"/healthz not ok: {doc}")
+    if "pool" not in doc.get("sources", []):
+        problems.append(f"/healthz lists no pool source: {doc}")
+    return problems
+
+
 def run_smoke(
     workers: int = 6,
     kill: int = 1,
@@ -37,10 +83,11 @@ def run_smoke(
     seed: int = 0,
     trace: bool = False,
     trace_out: str = "",
+    obs_http: bool = False,
 ) -> int:
     from repro.cdmm import ProblemSpec, coded_matmul, plan
     from repro.core import make_ring
-    from repro.dist import LocalPool, PoolBackend
+    from repro.dist import LocalPool, PoolBackend, PoolConfig
 
     if trace:
         from repro import obs
@@ -63,7 +110,10 @@ def run_smoke(
     B = Z32.random(rng, (size, size))
     oracle = np.asarray(Z32.matmul(A, B))
 
-    with LocalPool(workers=workers) as pool:
+    cfg = PoolConfig(workers=workers)
+    if obs_http:
+        cfg = cfg.with_(obs_http_port=0)  # ephemeral admin port
+    with LocalPool(config=cfg) as pool:
         caps = pool.master.worker_caps()
         print(f"pool up: {len(caps)} workers, scheme {scheme.name} "
               f"N={scheme.N} R={scheme.R} over {scheme.ring}")
@@ -102,6 +152,18 @@ def run_smoke(
         t = threading.Thread(target=_request)
         t.start()
         time.sleep(delay_ms / 4e3)  # tasks dispatched, workers parked
+        if obs_http:
+            # scrape mid-load: the request is in flight, workers parked
+            from repro.obs import http as obs_http_mod
+
+            url = obs_http_mod.server().url
+            problems = _scrape_obs(url, min_workers=scheme.R)
+            if problems:
+                for p in problems:
+                    print(f"FAIL obs: {p}")
+                return 1
+            print(f"obs scrape OK mid-request: {url}/metrics parsed "
+                  f"strictly, /healthz ok")
         killed = pool.kill(kill)
         print(f"SIGKILLed {len(killed)} worker(s) mid-request: pids {killed}")
         t.join(timeout=120)
@@ -165,9 +227,13 @@ def main(argv: Optional[list] = None) -> int:
                          "merged span timeline")
     ap.add_argument("--trace-out", default="",
                     help="write the timeline as Chrome trace_event JSON")
+    ap.add_argument("--obs-http", action="store_true",
+                    help="start the embedded admin server and gate on a "
+                         "strict /metrics parse mid-request")
     args = ap.parse_args(argv)
     return run_smoke(args.workers, args.kill, args.size, args.delay_ms,
-                     args.seed, trace=args.trace, trace_out=args.trace_out)
+                     args.seed, trace=args.trace, trace_out=args.trace_out,
+                     obs_http=args.obs_http)
 
 
 if __name__ == "__main__":

@@ -124,6 +124,7 @@ class WorkerRuntime:
         # (req, task) -> _StreamState for chunked tasks
         self._streams: Dict[Tuple[int, int], _StreamState] = {}
         self.tasks_done = 0
+        self.busy_us = 0.0  # cumulative compute wall, shipped in heartbeats
 
     # -- ring-matmul closures (jitted once per ring) -----------------------
 
@@ -166,7 +167,8 @@ class WorkerRuntime:
         while not self._stop.wait(self.heartbeat_s):
             try:
                 self._send({"type": "heartbeat", "t": time.time(),
-                            "tasks_done": self.tasks_done})
+                            "tasks_done": self.tasks_done,
+                            "busy_us": round(self.busy_us, 1)})
             except OSError:
                 return  # master gone; the main loop notices on recv
 
@@ -202,6 +204,7 @@ class WorkerRuntime:
         # the negotiated connection codec, raw for v0-style masters
         self._send(reply, out, codec=header.get("codec", "raw"))
         self.tasks_done += 1
+        self.busy_us += wall_us
 
     def _apply_injection(self, header: Dict) -> None:
         delay_ms = float(header.get("delay_ms", 0.0))
@@ -303,7 +306,8 @@ class WorkerRuntime:
                                codec=header.get("codec", "raw"))
                 elif kind == "ping":
                     self._send({"type": "heartbeat", "t": time.time(),
-                                "tasks_done": self.tasks_done})
+                                "tasks_done": self.tasks_done,
+                                "busy_us": round(self.busy_us, 1)})
                 elif kind == "shutdown":
                     return 0
                 # unknown types are ignored: forward-compatible masters

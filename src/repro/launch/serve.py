@@ -155,7 +155,7 @@ def batch_serving_demo(
     requests: int = 32, size: int = 64, pool_workers: int = 6,
     wait_ms: float = 50.0, target_batch: int = 8, privacy_t: int = 0,
     stats_every: float = 0.0, seed: int = 0, trace: bool = False,
-    trace_out: str = "",
+    trace_out: str = "", obs_http_port: int = None,
 ) -> Dict[str, Any]:
     """Continuous-batching serving in one function: ``requests`` concurrent
     same-shape matmuls through :class:`repro.serve.ServeScheduler` over a
@@ -170,6 +170,9 @@ def batch_serving_demo(
     ``trace=True`` records per-request span timelines (:mod:`repro.obs`)
     and returns the last request's merged timeline; ``trace_out`` also
     writes it as Chrome ``trace_event`` JSON for about://tracing.
+    ``obs_http_port`` (0 = ephemeral) serves the live telemetry plane
+    (``/metrics`` ``/healthz`` ``/stats`` ``/trace/<rid>``) while
+    requests run — point ``python -m repro.obs.top`` at it.
     """
     import json
 
@@ -199,10 +202,20 @@ def batch_serving_demo(
         return merge_snapshots(sched.stats.snapshot(), sched.master.stats())
 
     timeline = None
+    pool_cfg = PoolConfig(workers=pool_workers)
+    if obs_http_port is not None:
+        pool_cfg = pool_cfg.with_(obs_http_port=obs_http_port)
     with ServeScheduler(
-        config=PoolConfig(workers=pool_workers), policy=policy,
+        config=pool_cfg, policy=policy,
         max_queue=requests, seed=seed,
     ) as sched:
+        if obs_http_port is not None:
+            from repro.obs import http as obs_http
+
+            srv = obs_http.server()
+            if srv is not None:
+                print(f"obs admin plane: {srv.url}/metrics  {srv.url}/stats"
+                      f"  (python -m repro.obs.top --url {srv.url})")
         futs = [sched.submit(A, B, spec=spec) for A, B in pairs]
         if stats_every > 0:
             while any(not f.done() for f in futs):
@@ -295,6 +308,12 @@ def main():
         help="with --trace: also write the last request's timeline as "
         "Chrome trace_event JSON (open in about://tracing / perfetto)",
     )
+    ap.add_argument(
+        "--obs-http", type=int, default=None, metavar="PORT",
+        help="with --serve: expose the live telemetry plane (/metrics "
+        "/healthz /stats /trace/<rid>) on this port while requests run "
+        "(0 = ephemeral; also via REPRO_OBS_HTTP_PORT)",
+    )
     args = ap.parse_args()
     t0 = time.time()
     out = greedy_generate(args.arch, smoke=args.smoke, gen_len=args.gen_len)
@@ -307,6 +326,7 @@ def main():
             wait_ms=args.serve_wait_ms, target_batch=args.serve_batch,
             privacy_t=args.privacy_t, stats_every=args.stats_every,
             trace=args.trace, trace_out=args.trace_out,
+            obs_http_port=args.obs_http,
         )
         s = demo["stats"]
         print(

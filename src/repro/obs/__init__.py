@@ -1,15 +1,35 @@
-"""repro.obs — structured per-request tracing and exporters.
+"""repro.obs — structured tracing, live metrics and the HTTP admin plane.
 
-See :mod:`repro.obs.trace` for the span model and
-:mod:`repro.obs.export` for the JSON / Chrome trace_event / Prometheus
-output formats.
+See :mod:`repro.obs.trace` for the span model,
+:mod:`repro.obs.metrics` for the push-based time-series registry the
+pool/scheduler/serve components publish into, :mod:`repro.obs.health`
+for per-worker health scoring (EWMA round-trips + heartbeat jitter)
+feeding dispatch order and hedged re-dispatch,
+:mod:`repro.obs.http` for the embedded ``/metrics`` ``/healthz``
+``/stats`` ``/trace/<id>`` server, and :mod:`repro.obs.export` for the
+JSON / Chrome trace_event / Prometheus output formats
+(:func:`parse_prometheus` validates the exposition text strictly —
+CI's scrape oracle).  ``python -m repro.obs.top`` is a live terminal
+dashboard over ``/stats``.
 """
 from repro.obs.export import (
+    parse_prometheus,
     to_chrome_trace,
     to_json,
     to_prometheus,
     validate_timeline,
 )
+from repro.obs.health import HealthTracker
+from repro.obs.http import (
+    ObsHttpServer,
+    register_source,
+    register_trace_resolver,
+    start_server,
+    stop_server,
+    unregister_source,
+    unregister_trace_resolver,
+)
+from repro.obs.metrics import Counter, Gauge, MetricsRegistry, Series
 from repro.obs.trace import (
     Span,
     Timeline,
@@ -26,6 +46,12 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "Counter",
+    "Gauge",
+    "HealthTracker",
+    "MetricsRegistry",
+    "ObsHttpServer",
+    "Series",
     "Span",
     "Timeline",
     "TraceContext",
@@ -34,12 +60,19 @@ __all__ = [
     "maybe_context",
     "new_trace_id",
     "now",
+    "parse_prometheus",
+    "register_source",
+    "register_trace_resolver",
     "set_enabled",
     "spans_from_wire",
     "spans_to_wire",
+    "start_server",
+    "stop_server",
     "to_chrome_trace",
     "to_json",
     "to_prometheus",
     "tracer",
+    "unregister_source",
+    "unregister_trace_resolver",
     "validate_timeline",
 ]

@@ -44,6 +44,7 @@ import numpy as np
 from repro.cdmm.api import CdmmScheme, ProblemSpec, get_scheme
 from repro.cdmm.planner import plan
 from repro.dist.scheduler import SchedulerSaturated
+from repro.obs import http as obs_http
 from repro.obs import trace as obs
 
 from .coalescer import BatchCoalescer, CoalescePolicy
@@ -116,6 +117,12 @@ class ServeScheduler:
         self.objective = objective
         self.request_timeout = request_timeout
         self.stats = ServeStats()
+        # the admin HTTP plane scrapes this engine alongside its pool,
+        # and /trace/<request_id> resolves through the engine's rid index
+        self._obs_source = obs_http.register_source(
+            "serve", self.stats.snapshot
+        )
+        obs_http.register_trace_resolver(self._resolve_trace)
         self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._coalescer = BatchCoalescer(self.policy)
         self._entries: Dict[ProblemSpec, _SpecEntry] = {}
@@ -413,6 +420,17 @@ class ServeScheduler:
         linked = (carrier_tid,) if carrier_tid != tid else ()
         return obs.tracer().timeline(tid, *linked)
 
+    def _resolve_trace(self, key: str):
+        """HTTP /trace/<request_id> hook: serve request ids are ints."""
+        try:
+            rid = int(key)
+        except (TypeError, ValueError):
+            return None
+        try:
+            return self.trace(rid)
+        except (KeyError, ValueError):
+            return None
+
     # -- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
@@ -422,6 +440,8 @@ class ServeScheduler:
         if self._closed:
             return
         self._closed = True
+        obs_http.unregister_source(self._obs_source)
+        obs_http.unregister_trace_resolver(self._resolve_trace)
         self._queue.put(None)
         self._thread.join(timeout=60)
         self._pool.shutdown(wait=True)

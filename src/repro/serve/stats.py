@@ -22,9 +22,10 @@ from __future__ import annotations
 import math
 import threading
 from collections import deque
-from typing import Dict, Sequence, Tuple
+from typing import Sequence, Tuple
 
-from repro.stats import Histogram, StatsSnapshot, namespaced
+from repro.obs.metrics import MetricsRegistry
+from repro.stats import StatsSnapshot
 
 __all__ = ["ServeStats", "WAIT_BUCKETS_MS"]
 
@@ -38,31 +39,57 @@ RECENT_BATCHES = 64  # bounded per-batch log (spec label, fill, pad, wall)
 
 
 class ServeStats:
-    """Thread-safe counters + histograms for one serving engine."""
+    """Thread-safe counters + histograms for one serving engine.
+
+    Registry-backed: every bump lands in a live
+    :class:`repro.obs.metrics.MetricsRegistry` (the same numbers the
+    HTTP ``/metrics``/``/stats`` plane scrapes continuously), and the
+    legacy attribute reads (``stats.completed``) resolve to the live
+    counter values.
+    """
+
+    _COUNTERS = (
+        "submitted", "rejected", "completed", "failed", "timed_out",
+        "cancelled", "batches", "coalesced_batches", "total_fill",
+        "total_pad", "plan_cache_hits", "plan_cache_misses",
+    )
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self.submitted = 0
-        self.rejected = 0
-        self.completed = 0
-        self.failed = 0
-        self.timed_out = 0
-        self.cancelled = 0
-        self.batches = 0
-        self.coalesced_batches = 0  # batches with fill > 1
-        self.total_fill = 0
-        self.total_pad = 0  # RMFE slots padded with zeros (wasted packing)
-        self.plan_cache_hits = 0
-        self.plan_cache_misses = 0
-        self.exec_wall_ms = 0.0  # summed master wall-clock of batch jobs
-        self.wait_ms = Histogram(WAIT_BUCKETS_MS)
+        self._lock = threading.Lock()  # guards the recent-batch deque
+        self.metrics = MetricsRegistry("serve")
+        for name, doc in (
+            ("submitted", "requests admitted"),
+            ("rejected", "requests shed at the bounded admission queue"),
+            ("completed", "requests resolved with a product"),
+            ("failed", "requests that raised"),
+            ("timed_out", "requests that spent their deadline"),
+            ("cancelled", "requests cancelled before dispatch"),
+            ("batches", "batch jobs executed"),
+            ("coalesced_batches", "batch jobs with fill > 1"),
+            ("total_fill", "request slots served across all batches"),
+            ("total_pad", "RMFE slots padded with zeros (wasted packing)"),
+            ("plan_cache_hits", "serving decisions answered from cache"),
+            ("plan_cache_misses", "serving decisions planned fresh"),
+        ):
+            self.metrics.counter(name, doc)
+        self._counters = {
+            name: self.metrics.counter(name) for name in self._COUNTERS
+        }
+        # summed master wall-clock of batch jobs (float counter)
+        self._exec_wall = self.metrics.counter(
+            "exec_wall_ms", "summed master wall-clock of batch jobs (ms)"
+        )
+        self.wait_ms = self.metrics.histogram(
+            "wait_ms", "admission -> execution wait (ms)",
+            bounds=WAIT_BUCKETS_MS,
+        )
+        self.metrics.gauge("mean_fill", "mean requests per executed batch")
         self.recent: "deque" = deque(maxlen=RECENT_BATCHES)
 
     # -- recording ---------------------------------------------------------
 
     def bump(self, name: str, by: int = 1) -> None:
-        with self._lock:
-            setattr(self, name, getattr(self, name) + by)
+        self._counters[name].inc(by)
 
     def record_batch(
         self,
@@ -74,13 +101,13 @@ class ServeStats:
     ) -> None:
         """One executed batch job: ``fill`` requests served, ``pad`` zero
         slots, master wall-clock, and each member's admission->execute wait."""
+        self.bump("batches")
+        if fill > 1:
+            self.bump("coalesced_batches")
+        self.bump("total_fill", fill)
+        self.bump("total_pad", pad)
+        self._exec_wall.inc(wall_ms)
         with self._lock:
-            self.batches += 1
-            if fill > 1:
-                self.coalesced_batches += 1
-            self.total_fill += fill
-            self.total_pad += pad
-            self.exec_wall_ms += wall_ms
             self.recent.append(
                 {"spec": label, "fill": fill, "pad": pad,
                  "wall_ms": round(wall_ms, 3)}
@@ -90,33 +117,37 @@ class ServeStats:
 
     # -- reading -----------------------------------------------------------
 
+    def __getattr__(self, name: str):
+        # legacy attribute reads resolve to the live counter values;
+        # __getattr__ only fires for names missing from __dict__
+        counters = self.__dict__.get("_counters") or {}
+        if name in counters:
+            return counters[name].value
+        if name == "exec_wall_ms":
+            exec_wall = self.__dict__.get("_exec_wall")
+            if exec_wall is not None:
+                return exec_wall.value
+        raise AttributeError(name)
+
     def snapshot(self) -> StatsSnapshot:
-        """A copy of every counter, taken under the lock, plus the derived
-        serving signals (mean fill, wait quantiles, amortized us/request)
-        in the shared repro.stats schema (``serve_``-prefixed keys; the
-        legacy unprefixed names resolve with one DeprecationWarning).
-        Safe to call from any thread at any time."""
+        """Every counter plus the derived serving signals (mean fill,
+        wait quantiles, amortized us/request) in the shared repro.stats
+        schema (``serve_``-prefixed keys; the legacy unprefixed names
+        resolve with one DeprecationWarning).  Safe to call from any
+        thread at any time."""
+        batches = self._counters["batches"].value
+        total_fill = self._counters["total_fill"].value
+        exec_ms = float(self._exec_wall.value)
+        self.metrics.gauge("mean_fill").set(
+            total_fill / batches if batches else 0.0
+        )
         with self._lock:
-            counters = {
-                k: getattr(self, k)
-                for k in (
-                    "submitted", "rejected", "completed", "failed",
-                    "timed_out", "cancelled", "batches", "coalesced_batches",
-                    "total_fill", "total_pad", "plan_cache_hits",
-                    "plan_cache_misses",
-                )
-            }
-            exec_ms = self.exec_wall_ms
             recent = list(self.recent)
-        counters["exec_wall_ms"] = round(exec_ms, 3)
-        counters["mean_fill"] = (
-            counters["total_fill"] / counters["batches"]
-            if counters["batches"] else 0.0
-        )
-        counters["amortized_us_per_request"] = (
-            exec_ms * 1e3 / counters["total_fill"]
-            if counters["total_fill"] else None
-        )
-        counters.update(self.wait_ms.snapshot("wait_ms"))
-        counters["recent_batches"] = recent
-        return namespaced("serve", counters)
+        snap = self.metrics.snapshot(extra={
+            "amortized_us_per_request": (
+                exec_ms * 1e3 / total_fill if total_fill else None
+            ),
+            "recent_batches": recent,
+        })
+        snap["serve_exec_wall_ms"] = round(exec_ms, 3)
+        return snap

@@ -30,6 +30,7 @@ __all__ = [
     "describe",
     "get",
     "get_bool",
+    "get_float",
     "get_int",
     "warn_deprecated_once",
 ]
@@ -55,7 +56,7 @@ class Setting:
 
     name: str  # accessor name (settings.get(name))
     env: str  # environment variable
-    kind: str  # "bool" | "int" | "str"
+    kind: str  # "bool" | "int" | "float" | "str"
     default: object
     doc: str  # one line, printed by describe()
     legacy_env: Optional[str] = None  # deprecated fallback variable
@@ -121,6 +122,28 @@ SETTINGS: Dict[str, Setting] = {
             "let spawned worker/agent stderr through instead of "
             "discarding it (pool debugging)",
         ),
+        Setting(
+            "obs_http_port", "REPRO_OBS_HTTP_PORT", "int", None,
+            "serve the live telemetry plane (/metrics /healthz /stats "
+            "/trace) on this port (0 = ephemeral; unset = no server)",
+        ),
+        Setting(
+            "hedge_factor", "REPRO_HEDGE_FACTOR", "float", 0.0,
+            "speculatively re-dispatch a share outstanding past "
+            "p95(recent share round-trips) x this factor to a healthy "
+            "worker; first valid reply wins (0 = never hedge)",
+        ),
+        Setting(
+            "health_ewma", "REPRO_HEALTH_EWMA", "float", 0.2,
+            "EWMA smoothing factor of the per-worker health signals "
+            "(share round-trip + heartbeat jitter)",
+        ),
+        Setting(
+            "obs_retention", "REPRO_OBS_RETENTION", "float", 300.0,
+            "retention window in seconds of the time-series metrics "
+            "behind windowed quantiles (hedge deadlines, /metrics "
+            "window gauges)",
+        ),
     )
 }
 
@@ -130,6 +153,8 @@ def _parse(setting: Setting, raw: str):
         return raw.strip().lower() in _TRUTHY
     if setting.kind == "int":
         return int(raw)
+    if setting.kind == "float":
+        return float(raw)
     return raw
 
 
@@ -159,6 +184,13 @@ def get_bool(name: str, env: Mapping[str, str] = os.environ) -> bool:
 def get_int(name: str, env: Mapping[str, str] = os.environ) -> Optional[int]:
     val = get(name, env)
     return val if val is None else int(val)
+
+
+def get_float(
+    name: str, env: Mapping[str, str] = os.environ
+) -> Optional[float]:
+    val = get(name, env)
+    return val if val is None else float(val)
 
 
 def describe() -> str:

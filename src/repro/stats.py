@@ -7,10 +7,12 @@ the shared snapshot contract they all emit:
 - **counters** are plain ints under their own name (``submitted``,
   ``completed``, ``redispatched`` ...);
 - **latency distributions** are milliseconds and follow the
-  ``<name>_ms_hist`` / ``<name>_ms_p50`` / ``<name>_ms_p99`` triple —
-  the histogram is a dict of cumulative-style bucket labels
-  (``"<=0.5"`` ... ``"inf"``) to counts, and the quantiles are the upper
-  bound of the bucket the quantile falls in (``None`` when empty);
+  ``<name>_ms_hist`` / ``<name>_ms_p50`` / ``<name>_ms_p99`` /
+  ``<name>_ms_sum`` family — the histogram is a dict of
+  cumulative-style bucket labels (``"<=0.5"`` ... ``"inf"``) to counts,
+  the quantiles are the upper bound of the bucket the quantile falls in
+  (``None`` when empty), and the sum is the total observed milliseconds
+  (what Prometheus histogram ``_sum`` samples carry);
 - **bytes** are ``bytes_in`` / ``bytes_out`` for what actually crossed
   the wire and ``raw_bytes_in`` / ``raw_bytes_out`` for the pre-codec
   payload sizes, so ``raw/wire`` is the observed compression ratio.
@@ -74,6 +76,7 @@ class Histogram:
     def __init__(self, bounds: Sequence[float] = BUCKETS_MS):
         self.bounds = tuple(bounds)
         self._counts = [0] * len(self.bounds)
+        self._sum = 0.0
         self._lock = threading.Lock()
 
     def observe(self, value_ms: float) -> None:
@@ -81,6 +84,7 @@ class Histogram:
             if value_ms <= bound:
                 with self._lock:
                     self._counts[k] += 1
+                    self._sum += value_ms
                 return
 
     @property
@@ -96,15 +100,19 @@ class Histogram:
         )
 
     def snapshot(self, name: str) -> Dict[str, object]:
-        """``{f"{name}_hist": {...}, f"{name}_p50": ..., f"{name}_p99": ...}``
-        — ``name`` should end in ``_ms`` per the schema."""
+        """``{f"{name}_hist": {...}, f"{name}_p50": ..., f"{name}_p99": ...,
+        f"{name}_sum": ...}`` — ``name`` should end in ``_ms`` per the
+        schema; the sum is what Prometheus histograms need next to the
+        bucket counts."""
         with self._lock:
             counts = list(self._counts)
+            total = self._sum
         hist = dict(zip(map(_label, self.bounds), counts))
         return {
             f"{name}_hist": hist,
             f"{name}_p50": quantile_from_hist(hist, 0.50),
             f"{name}_p99": quantile_from_hist(hist, 0.99),
+            f"{name}_sum": round(total, 3),
         }
 
 

@@ -342,8 +342,17 @@ def test_heartbeat_timeout_detects_stalled_worker():
     import signal as _signal
 
     with LocalPool(workers=3, heartbeat_s=0.2, heartbeat_timeout=1.5) as fresh:
-        spec = ProblemSpec(t=8, r=8, s=8, n=1, ring=Z32, N=3)
-        scheme = plan(spec).instantiate()
+        spec = ProblemSpec(t=8, r=8, s=8, n=1, ring=Z32, N=3,
+                           straggler_budget=0)
+        # zero slack (R == N): the planner's default pick at N=3 is plain
+        # replication with R=1, which completes off the two healthy
+        # workers without ever needing the stall unmasked — this test is
+        # only meaningful when the stalled worker's share is required
+        p = plan(spec, objective="threshold")
+        rank = max(range(len(p.candidates)),
+                   key=lambda i: p.candidates[i].costs.R)
+        scheme = p.instantiate(rank)
+        assert scheme.R == scheme.N == 3
         rng = np.random.default_rng(9)
         A, B = _problem(scheme, rng)
         oracle = np.asarray(coded_matmul(A, B, scheme, backend="local"))

@@ -165,12 +165,19 @@ def test_prometheus_export_counters_hist_gauges():
         "transport": "pack",  # non-numeric: skipped
     })
     text = obs.to_prometheus(snap)
+    assert "# HELP repro_pool_requests" in text
     assert "# TYPE repro_pool_requests counter" in text
     assert "repro_pool_requests 3" in text
     assert 'le="1"' in text and 'le="+Inf"' in text
-    assert "repro_pool_wall_ms_ms_bucket" in text
+    # the histogram family keeps the snapshot's base name (no doubled
+    # unit suffix) and carries the full cumulative triple
+    assert "# TYPE repro_pool_wall_ms histogram" in text
+    assert "repro_pool_wall_ms_bucket" in text
+    assert "repro_pool_wall_ms_count 6" in text
     assert "repro_pool_wall_ms_p50 2.0" in text
     assert "transport" not in text
+    # the exposition parses strictly (the CI scrape oracle)
+    obs.parse_prometheus(text)
 
 
 def test_validate_timeline_accepts_good_rejects_bad():

@@ -140,19 +140,32 @@ def test_scheduler_stats_snapshot_is_plain_dict():
     st._bump("submitted")
     st._bump("timed_out")
     snap = st.snapshot()
-    # counters, plus the shared-schema request-latency histogram triple
-    # (repro.stats: <name>_hist / _p50 / _p99)
+    # counters in the shared scheduler_-prefixed schema, plus the
+    # request-latency histogram family (repro.stats: _hist/_p50/_p99/_sum)
     assert {
-        k: v for k, v in snap.items() if not k.startswith("request_ms")
+        k: v for k, v in snap.items()
+        if not k.startswith("scheduler_request_ms")
     } == {
-        "submitted": 1, "rejected": 0, "completed": 0, "failed": 0,
-        "timed_out": 1, "plan_cache_hits": 0, "plan_cache_misses": 0,
+        "scheduler_submitted": 1, "scheduler_rejected": 0,
+        "scheduler_completed": 0, "scheduler_failed": 0,
+        "scheduler_timed_out": 1, "scheduler_plan_cache_hits": 0,
+        "scheduler_plan_cache_misses": 0,
     }
-    assert set(snap) >= {"request_ms_hist", "request_ms_p50", "request_ms_p99"}
-    assert snap["request_ms_p50"] is None  # nothing observed yet
-    # a snapshot is a copy, not a view
+    assert set(snap) >= {
+        "scheduler_request_ms_hist", "scheduler_request_ms_p50",
+        "scheduler_request_ms_p99",
+    }
+    assert snap["scheduler_request_ms_p50"] is None  # nothing observed yet
+    # legacy unprefixed reads still resolve (one DeprecationWarning)
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert snap["submitted"] == 1
+    # live attribute reads track the registry; snapshots are copies
     st._bump("submitted")
-    assert snap["submitted"] == 1
+    assert st.submitted == 2
+    assert snap["scheduler_submitted"] == 1
 
 
 # --------------------------------------------------------------------------
